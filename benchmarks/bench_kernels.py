@@ -1,0 +1,58 @@
+"""Kernel micro-benchmarks: µs/call and effective GB/s for the three
+Pallas kernels (interpret mode on CPU — correctness-path timing, not TPU
+perf) against their jnp references."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import save_detail
+from repro.kernels import ref
+from repro.kernels.masked_agg import masked_agg_pallas
+from repro.kernels.sign_sim import sign_sim_pallas
+from repro.kernels.unify import unify_pallas
+
+
+def _time(fn, args, iters=3):
+    jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(quick: bool = False):
+    d = 1 << 17 if quick else 1 << 19
+    k, n, t = 8, 16, 16
+    key = jax.random.PRNGKey(0)
+    tv = jax.random.normal(key, (k, d), jnp.float32)
+    u = jax.random.normal(key, (n, d), jnp.float32)
+    m = (jax.random.uniform(key, (n, d)) > 0.5).astype(jnp.float32)
+    lam = jnp.ones((n,))
+    gam = jnp.full((n,), 1.0 / n)
+    th = jax.random.normal(key, (t, d), jnp.float32)
+
+    rows, detail = [], {}
+    cases = [
+        ("unify", lambda x: unify_pallas(x, interpret=True), (tv,),
+         ref.unify_ref, (tv,), k * d * 4),
+        ("masked_agg", lambda a, b, c, e: masked_agg_pallas(a, b, c, e, interpret=True),
+         (u, m, lam, gam),
+         lambda a, b, c, e: ref.masked_agg_ref(a, b, c, e, 0.4),
+         (u, m, lam, gam), 2 * n * d * 4),
+        ("sign_sim", lambda x: sign_sim_pallas(x, interpret=True), (th,),
+         ref.sign_sim_ref, (th,), t * d * 4),
+    ]
+    for name, kfn, kargs, rfn, rargs, bytes_in in cases:
+        us_k = _time(kfn, kargs)
+        us_r = _time(jax.jit(rfn), rargs)
+        gbps = bytes_in / (us_k * 1e-6) / 1e9
+        rows.append((f"kernel/{name}/pallas_interp", us_k, f"{gbps:.2f}GB/s"))
+        rows.append((f"kernel/{name}/jnp_ref", us_r, f"d={d}"))
+        detail[name] = {"us_pallas_interp": us_k, "us_ref": us_r,
+                        "bytes_in": bytes_in}
+    save_detail("kernels", detail)
+    return {"rows": rows, "detail": detail}

@@ -1,0 +1,54 @@
+"""Benchmark driver - one module per paper table/figure + kernels +
+roofline.  Prints ``name,us_per_call,derived`` CSV; detail JSON lands in
+results/bench/.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+BENCHES = [
+    "bench_table1",      # Table 1: single-task clients
+    "bench_table2",      # Table 2: multi-task clients
+    "bench_similarity",  # Fig. 2-3: sign similarity vs relatedness
+    "bench_30task",      # Fig. 4: 30-task benchmark
+    "bench_scaling",     # Fig. 5: tasks-per-client scaling
+    "bench_conflicts",   # Fig. 6: conflict groups + cross-task ablation
+    "bench_kernels",     # Pallas kernel microbench
+    "bench_roofline",    # Roofline from the dry-run artifacts
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced rounds/sizes for CI-speed runs")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    benches = [b for b in BENCHES
+               if args.only in (None, b, b.removeprefix("bench_"))]
+    print("name,us_per_call,derived")
+    failed = []
+    for name in benches:
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            out = mod.run(quick=args.quick)
+            for row in out["rows"]:
+                print(f"{row[0]},{row[1]:.1f},{row[2]}")
+            sys.stdout.flush()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Serving example: batched prefill + autoregressive decode with KV /
+recurrent-state caches, across three architecture families (dense GQA
+with ring-buffer SWA, xLSTM with O(1) state, deepseek-style MLA with
+the compressed latent cache).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, load_arch
+
+
+def serve(arch: str, *, batch=2, prompt_len=24, gen=8):
+    cfg = load_arch(arch).reduced()
+    model = cfg.build(SHAPES["decode_32k"])
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    lora = model.lora_init(jax.random.PRNGKey(1))
+    prompt = jax.random.randint(key, (batch, prompt_len), 1, cfg.vocab)
+
+    prefill = jax.jit(lambda p, l, b, c: model.prefill_step(p, l, b, c))
+    decode = jax.jit(lambda p, l, b, c, pos: model.decode_fn(p, l, b, c, pos))
+
+    cache = model.init_cache(batch, prompt_len + gen + 8)
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, lora, {"tokens": prompt}, cache)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for i in range(gen - 1):
+        logits, cache = decode(params, lora, {"tokens": tok}, cache,
+                               jnp.int32(prompt_len + i))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+    toks = jnp.concatenate(out, axis=1)
+
+    cache_bytes = sum(x.size * x.dtype.itemsize
+                      for x in jax.tree_util.tree_leaves(cache))
+    print(f"{arch:24s} generated {gen} tokens x {batch} seqs in {dt:.2f}s  "
+          f"cache={cache_bytes/2**20:.2f} MiB")
+    print(f"  sample: {list(map(int, toks[0][:8]))}")
+
+
+def main():
+    for arch in ["qwen2-0.5b", "xlstm-1.3b", "deepseek-v2-236b"]:
+        serve(arch)
+
+
+if __name__ == "__main__":
+    main()

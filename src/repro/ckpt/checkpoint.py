@@ -1,0 +1,66 @@
+"""Round-resumable checkpointing: pytrees → npz + json manifest.
+
+Arrays are stored flat (leaf path → array) in a single .npz; the
+manifest records the tree structure, dtypes, and user metadata
+(round number, strategy, config digest) so a federated run or a
+trainer can resume exactly.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+SEP = "/"
+
+
+def _flatten_with_paths(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree: PyTree, metadata: Optional[dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    np.savez(path + ".npz", **flat)
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {
+        "treedef": str(treedef),
+        "keys": sorted(flat.keys()),
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "metadata": metadata or {},
+    }
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def load(path: str, like: PyTree) -> Tuple[PyTree, dict]:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    data = np.load(path + ".npz")
+    flat_like = _flatten_with_paths(like)
+    missing = set(flat_like) - set(data.files)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    out = []
+    for (path_keys, leaf) in paths:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_keys)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        out.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["metadata"]

@@ -1,0 +1,25 @@
+from repro.common import tree
+from repro.common.tree import (
+    tree_size,
+    tree_flatten_vector,
+    tree_unflatten_vector,
+    tree_zeros_like,
+    tree_add,
+    tree_sub,
+    tree_scale,
+    tree_dot,
+    tree_norm,
+)
+
+__all__ = [
+    "tree",
+    "tree_size",
+    "tree_flatten_vector",
+    "tree_unflatten_vector",
+    "tree_zeros_like",
+    "tree_add",
+    "tree_sub",
+    "tree_scale",
+    "tree_dot",
+    "tree_norm",
+]

@@ -1,0 +1,75 @@
+"""Pytree utilities shared across the framework.
+
+Task vectors live in (LoRA-)parameter pytrees; the MaTU server math is
+defined over the *flattened* d-dimensional vector. These helpers move
+between the two representations deterministically (leaves in
+``jax.tree_util`` canonical order) so client and server always agree on
+the layout of the unified task vector.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_size(tree: PyTree) -> int:
+    """Total number of scalar entries across all leaves."""
+    return sum(int(np.prod(leaf.shape)) for leaf in jax.tree_util.tree_leaves(tree))
+
+
+def tree_flatten_vector(tree: PyTree, dtype=jnp.float32) -> jax.Array:
+    """Flatten a pytree of arrays into a single 1-D vector.
+
+    Leaf order is jax's canonical tree order, so the inverse
+    (:func:`tree_unflatten_vector`) round-trips exactly.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((0,), dtype=dtype)
+    return jnp.concatenate([jnp.ravel(leaf).astype(dtype) for leaf in leaves])
+
+
+def tree_unflatten_vector(vector: jax.Array, like: PyTree) -> PyTree:
+    """Inverse of :func:`tree_flatten_vector` given a structural template."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out, offset = [], 0
+    for leaf in leaves:
+        n = int(np.prod(leaf.shape))
+        out.append(jnp.reshape(vector[offset : offset + n], leaf.shape).astype(leaf.dtype))
+        offset += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_dot(a: PyTree, b: PyTree) -> jax.Array:
+    parts = jax.tree_util.tree_map(lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    return sum(jax.tree_util.tree_leaves(parts))
+
+
+def tree_norm(a: PyTree) -> jax.Array:
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)

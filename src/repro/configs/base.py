@@ -1,0 +1,213 @@
+"""Architecture & input-shape registry.
+
+Each assigned architecture has a module ``repro/configs/<id>.py``
+defining ``CONFIG = ArchConfig(...)`` with the exact published
+hyper-parameters (source cited in the file).  ``ArchConfig.build``
+instantiates the model; ``reduced()`` yields the smoke-test variant
+(≤2 layers/units, d_model ≤ 512, ≤ 4 experts) of the same family.
+
+Input shapes are the four assigned global shapes; ``input_specs``
+produces ``jax.ShapeDtypeStruct`` stand-ins for every model input of a
+given (arch × shape) so the multi-pod dry-run lowers without touching
+device memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    source: str = ""                 # citation
+    # dense/attention options
+    qkv_bias: bool = False
+    rope_base: float = 1_000_000.0
+    tie_embeddings: bool = False
+    head_dim: Optional[int] = None
+    # moe options
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    shared_d_ff: Optional[int] = None
+    moe_capacity_factor: float = 1.25
+    # mla options (deepseek)
+    use_mla: bool = False
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # ssm / hybrid options
+    ssm_state: int = 16
+    mlstm_chunk: int = 256
+    hybrid_window: int = 2048        # hymba SWA on the attention branch
+    # vlm options
+    mrope_sections: Optional[Tuple[int, int, int]] = None
+    vision_tokens: int = 1024        # stub patch embeddings per sample
+    # audio options
+    enc_frames: int = 1500
+    # long-context policy
+    sliding_window_long: Optional[int] = 4096  # None => skip long_500k
+    # PEFT / numerics
+    lora_rank: int = 16
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+
+    # -- variants ------------------------------------------------------------
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: same family, tiny dims, fp32, CPU-friendly."""
+        r = replace(
+            self,
+            n_layers=2,
+            d_model=min(self.d_model, 128),
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            d_ff=min(self.d_ff, 256) if self.d_ff else 0,
+            vocab=min(self.vocab, 512),
+            n_experts=min(self.n_experts, 4),
+            top_k=min(self.top_k, 2),
+            n_shared_experts=min(self.n_shared_experts, 1),
+            shared_d_ff=min(self.shared_d_ff, 64) if self.shared_d_ff else None,
+            moe_capacity_factor=8.0,  # droplessness for smoke-test equality
+            q_lora_rank=32,
+            kv_lora_rank=16,
+            qk_nope_dim=16,
+            qk_rope_dim=8,
+            v_head_dim=16,
+            head_dim=None,
+            ssm_state=8,
+            mlstm_chunk=16,
+            hybrid_window=16,
+            vision_tokens=8,
+            enc_frames=16,
+            mrope_sections=(4, 6, 6) if self.mrope_sections else None,
+            lora_rank=4,
+            dtype=jnp.float32,
+            remat=False,
+        )
+        return r
+
+    @property
+    def supports_long(self) -> bool:
+        if self.family in ("ssm", "hybrid"):
+            return True
+        if self.family == "audio":
+            return False  # see DESIGN.md: 500k decoder context is not meaningful
+        return self.sliding_window_long is not None
+
+    def window_for_shape(self, shape: ShapeSpec) -> Optional[int]:
+        if shape.name == "long_500k" and self.family not in ("ssm",):
+            return self.sliding_window_long
+        return None
+
+    # -- model builder --------------------------------------------------------
+    def build(self, shape: Optional[ShapeSpec] = None):
+        from repro.models.builders import build_model
+        return build_model(self, shape)
+
+
+def load_arch(name: str) -> ArchConfig:
+    mod = importlib.import_module(
+        f"repro.configs.{name.replace('-', '_').replace('.', '_')}")
+    return mod.CONFIG
+
+
+ARCH_IDS = [
+    "xlstm-1.3b",
+    "qwen2.5-3b",
+    "whisper-large-v3",
+    "hymba-1.5b",
+    "qwen2-0.5b",
+    "deepseek-v2-236b",
+    "qwen2.5-32b",
+    "qwen2-vl-7b",
+    "granite-moe-3b-a800m",
+    "codeqwen1.5-7b",
+]
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, *, concrete: bool = False,
+                batch_override: Optional[int] = None,
+                seq_override: Optional[int] = None) -> Dict[str, Any]:
+    """Model inputs for a given shape. ``concrete=True`` returns real
+    arrays (for smoke tests); default returns ShapeDtypeStructs."""
+    b = batch_override or shape.global_batch
+    s = seq_override or shape.seq_len
+    f32, i32 = cfg.dtype, jnp.int32
+
+    def mk(shp, dt):
+        if concrete:
+            if dt == i32:
+                return jnp.zeros(shp, dt)
+            return jnp.ones(shp, dt) * 0.01
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if shape.kind == "decode":
+        batch = {"tokens": mk((b, 1), i32)}
+    elif cfg.family == "audio":
+        batch = {
+            "audio_embeds": mk((b, cfg.enc_frames, cfg.d_model), f32),
+            "tokens": mk((b, s), i32),
+            "labels": mk((b, s), i32),
+        }
+    elif cfg.family == "vlm":
+        n_img = min(cfg.vision_tokens, max(s // 4, 1))
+        n_txt = s - n_img
+        pos = mk((b, s, 3), i32)
+        batch = {
+            "tokens": mk((b, n_txt), i32),
+            "labels": mk((b, n_txt), i32),
+            "extra_embeds": mk((b, n_img, cfg.d_model), f32),
+            "positions": pos,
+        }
+    else:
+        batch = {"tokens": mk((b, s), i32), "labels": mk((b, s), i32)}
+
+    if shape.kind == "prefill":
+        batch.pop("labels", None)
+    return batch

@@ -1,0 +1,26 @@
+"""granite-moe-3b-a800m — 40 routed experts, top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base family].
+
+32 layers, d_model=1536, 24 heads (GQA kv=8), per-expert d_ff=512.
+40 experts do not divide the 16-way model axis → token-parallel MoE
+fallback (DESIGN.md §5): tokens split over ``model`` along sequence,
+experts replicated, all-gather restores the sequence.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab=49155,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+    n_experts=40,
+    top_k=8,
+    rope_base=10_000.0,
+    tie_embeddings=True,
+)

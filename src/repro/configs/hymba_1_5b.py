@@ -1,0 +1,24 @@
+"""hymba-1.5b — parallel attention + mamba heads [arXiv:2411.13676].
+
+32 hybrid layers, d_model=1600, 25 attention heads (GQA kv=5) in
+parallel with a Mamba branch (ssm_state=16); SWA (window 2048) on the
+attention branch as in the paper; SwiGLU d_ff=5504. Sub-quadratic path
+→ runs long_500k.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab=32001,
+    source="arXiv:2411.13676",
+    ssm_state=16,
+    hybrid_window=2048,
+    rope_base=10_000.0,
+)

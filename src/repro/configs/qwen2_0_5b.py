@@ -1,0 +1,18 @@
+"""qwen2-0.5b — dense GQA with QKV bias, tied embeddings [arXiv:2407.10671]."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    d_ff=4864,
+    vocab=151936,
+    source="arXiv:2407.10671",
+    qkv_bias=True,
+    rope_base=1_000_000.0,
+    tie_embeddings=True,
+)

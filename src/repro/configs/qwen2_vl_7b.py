@@ -1,0 +1,27 @@
+"""qwen2-vl-7b — M-RoPE, dynamic resolution (vision frontend STUB)
+[arXiv:2409.12191].
+
+28 dense layers, d_model=3584, 28 heads (GQA kv=4), d_ff=18944.
+M-RoPE splits the 64 rotary frequency slots into (16, 24, 24) for
+temporal/height/width coordinates.  input_specs supplies precomputed
+patch embeddings (ViT encoder + projector stubbed per the brief);
+the language model and the M-RoPE position handling are real.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18944,
+    vocab=152064,
+    source="arXiv:2409.12191",
+    qkv_bias=True,
+    rope_base=1_000_000.0,
+    mrope_sections=(16, 24, 24),
+    vision_tokens=1024,
+)

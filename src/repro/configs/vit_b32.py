@@ -1,0 +1,36 @@
+"""ViT-B/32 — the paper's own model [Dosovitskiy et al., 2021].
+
+Used (with LoRA rank 16, as in the paper) by the federated benchmarks.
+224x224 @ 32px patches → 49 patches of dim 3072. The paper-scale
+config is exercised by the dry-run; the fed accuracy benchmarks use
+``reduced_vit()`` on synthetic tasks (see DESIGN.md §3).
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ViTConfig:
+    patch_dim: int = 3072        # 32*32*3
+    n_patches: int = 49
+    d_model: int = 768
+    n_layers: int = 12
+    n_heads: int = 12
+    d_ff: int = 3072
+    lora_rank: int = 16
+
+
+CONFIG = ViTConfig()
+
+
+def reduced_vit() -> ViTConfig:
+    return ViTConfig(patch_dim=32, n_patches=8, d_model=64, n_layers=2,
+                     n_heads=4, d_ff=128, lora_rank=4)
+
+
+def build(cfg: ViTConfig = CONFIG, dtype=None):
+    import jax.numpy as jnp
+    from repro.models.vit import ViT
+    return ViT(patch_dim=cfg.patch_dim, n_patches=cfg.n_patches,
+               d_model=cfg.d_model, n_layers=cfg.n_layers, n_heads=cfg.n_heads,
+               d_ff=cfg.d_ff, dtype=dtype or jnp.float32)

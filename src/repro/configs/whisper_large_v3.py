@@ -1,0 +1,24 @@
+"""whisper-large-v3 — encoder-decoder, conv frontend STUB [arXiv:2212.04356].
+
+32 encoder + 32 decoder layers, d_model=1280, 20 MHA heads, GELU MLP
+d_ff=5120, vocab 51866.  input_specs supplies precomputed 1500-frame
+embeddings (the mel+conv frontend is the brief's allowed stub).
+long_500k is SKIPPED for this arch (DESIGN.md §4): pure full-attention
+enc-dec and a 500k-token decoder context has no audio interpretation.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-large-v3",
+    family="audio",
+    n_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab=51866,
+    source="arXiv:2212.04356",
+    enc_frames=1500,
+    sliding_window_long=None,  # long_500k skipped (see DESIGN.md)
+)

@@ -1,0 +1,24 @@
+"""xlstm-1.3b — sLSTM + mLSTM blocks [arXiv:2405.04517].
+
+48 layers at d_model=2048 as 24 alternating (mLSTM, sLSTM) pairs,
+4 heads, vocab 50304, no FFN outside the blocks (d_ff=0: the mLSTM
+block carries a proj_factor-2 up-projection, the sLSTM block a GeGLU
+FFN, per the xLSTM block designs).  Sub-quadratic → runs long_500k
+natively on O(1) recurrent state.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab=50304,
+    source="arXiv:2405.04517",
+    tie_embeddings=True,
+    sliding_window_long=None,  # attention-free; long_500k runs natively
+)

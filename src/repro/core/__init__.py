@@ -1,0 +1,24 @@
+"""MaTU core: the paper's contribution as composable JAX functions.
+
+Client math:  unify / modulators / modulate      (repro.core.unify)
+Server math:  Eq. 3-6 + matu_round               (repro.core.aggregation)
+Orchestration: MaTUClient / MaTUServer           (repro.core.client/.server)
+Baseline merges: FedAvg / TIES / MaT-FL grouping (repro.core.baselines)
+"""
+
+from repro.core.aggregation import (agreement_mask, cross_task_aggregate,
+                                    matu_round, sign_similarity,
+                                    task_aggregate, topk_similar)
+from repro.core.client import ClientDownlink, ClientUpload, MaTUClient
+from repro.core.server import MaTUServer, MaTUServerConfig
+from repro.core.unify import (modulate, modulators, task_mask, task_scaler,
+                              unify, unify_with_modulators)
+
+__all__ = [
+    "agreement_mask", "cross_task_aggregate", "matu_round",
+    "sign_similarity", "task_aggregate", "topk_similar",
+    "ClientDownlink", "ClientUpload", "MaTUClient",
+    "MaTUServer", "MaTUServerConfig",
+    "modulate", "modulators", "task_mask", "task_scaler",
+    "unify", "unify_with_modulators",
+]

@@ -1,0 +1,70 @@
+"""Aggregation math for the paper's baselines (Tables 1–2).
+
+Orchestration (client sampling, local training, personalization
+bookkeeping) lives in ``repro.fed.strategies``; this module is the pure
+merge math:
+
+* FedAvg / FedProx server merge (identical server op; FedProx differs
+  client-side via the proximal term — see ``repro.fed.local``).
+* TIES-merging (Yadav et al. 2023): trim → elect sign → disjoint mean.
+* MaT-FL dynamic grouping (Cai et al. 2023): cosine-similarity greedy
+  clustering; aggregation happens within groups.
+* NTK-FedAvg (Muhamed et al. 2024): FedAvg over task adapters of a
+  *linearised* model — the linearisation itself is in
+  ``repro.fed.local.linearised_loss`` (jvp-based); the server merge is
+  plain weighted averaging, as in the paper.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def weighted_average(vectors: jax.Array, weights: jax.Array) -> jax.Array:
+    """FedAvg merge: vectors (M, d), weights (M,) ∝ |D|."""
+    w = weights / jnp.maximum(jnp.sum(weights), 1e-12)
+    return jnp.einsum("m,md->d", w, vectors)
+
+
+def ties_merge(task_vectors: jax.Array, *, keep_frac: float = 0.2) -> jax.Array:
+    """TIES-merging: per-vector magnitude trim to ``keep_frac``, sign
+    election by summed magnitude, disjoint mean over aligned entries."""
+    k, d = task_vectors.shape
+    keep = max(1, int(d * keep_frac))
+    # trim: zero all but the top-|keep| magnitude entries of each vector
+    mags = jnp.abs(task_vectors)
+    thresh = jax.lax.top_k(mags, keep)[0][:, -1:]
+    trimmed = jnp.where(mags >= thresh, task_vectors, 0.0)
+    # elect: sign of summed magnitudes
+    sigma = jnp.sign(jnp.sum(trimmed, axis=0))
+    aligned = (trimmed * sigma[None, :]) > 0
+    count = jnp.maximum(jnp.sum(aligned, axis=0), 1)
+    return jnp.sum(jnp.where(aligned, trimmed, 0.0), axis=0) / count
+
+
+def cosine_similarity_matrix(vectors: jax.Array, eps: float = 1e-12) -> jax.Array:
+    norms = jnp.linalg.norm(vectors, axis=-1, keepdims=True)
+    unit = vectors / jnp.maximum(norms, eps)
+    return unit @ unit.T
+
+
+def greedy_group(sim: np.ndarray, threshold: float = 0.0) -> List[List[int]]:
+    """MaT-FL grouping: greedily merge clients whose mean cosine
+    similarity to an existing group exceeds ``threshold``."""
+    n = sim.shape[0]
+    groups: List[List[int]] = []
+    for i in range(n):
+        best, best_s = None, threshold
+        for gi, g in enumerate(groups):
+            s = float(np.mean([sim[i, j] for j in g]))
+            if s > best_s:
+                best, best_s = gi, s
+        if best is None:
+            groups.append([i])
+        else:
+            groups[best].append(i)
+    return groups

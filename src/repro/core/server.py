@@ -1,0 +1,99 @@
+"""MaTU stateless server (paper §3.2 "Many-tasks Aggregation").
+
+The server keeps NO client state across rounds — it consumes the
+round's uploads, runs Eq. 3–6 per task, and emits per-client downlinks
+(unified vector + modulators for that client's tasks).  Task identity
+(the |T|-sized registry) is the only global it needs.
+
+This Python-level implementation stacks only the members of each task
+(memory-lean for the fed simulator).  The dense, fully-vmapped variant
+used for the on-mesh lowering is :func:`repro.core.aggregation.matu_round`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import (EPS_DEFAULT, KAPPA_DEFAULT, RHO_DEFAULT,
+                                    combine_round, cross_task_aggregate,
+                                    sign_similarity, task_aggregate,
+                                    topk_similar)
+from repro.core.client import ClientDownlink, ClientUpload
+from repro.core.unify import unify_with_modulators
+
+
+@dataclass
+class MaTUServerConfig:
+    n_tasks: int
+    rho: float = RHO_DEFAULT
+    eps: float = EPS_DEFAULT
+    kappa: int = KAPPA_DEFAULT
+    cross_task: bool = True
+    uniform_cross: bool = False
+
+
+class MaTUServer:
+    def __init__(self, cfg: MaTUServerConfig):
+        self.cfg = cfg
+        self.last_similarity: Optional[jax.Array] = None
+        self.last_task_vectors: Optional[jax.Array] = None
+
+    def round(self, uploads: List[ClientUpload]) -> Dict[int, ClientDownlink]:
+        cfg = self.cfg
+        d = int(uploads[0].unified.shape[0])
+
+        # ---- Eq. 3 + 4 per task, stacking only members -------------------
+        tau_hats = jnp.zeros((cfg.n_tasks, d), jnp.float32)
+        m_hats = jnp.ones((cfg.n_tasks, d), jnp.float32)
+        held = [False] * cfg.n_tasks
+        for t in range(cfg.n_tasks):
+            rows, row_masks, row_lams, row_sizes = [], [], [], []
+            for up in uploads:
+                if t in up.task_ids:
+                    i = up.task_ids.index(t)
+                    rows.append(up.unified)
+                    row_masks.append(up.masks[i])
+                    row_lams.append(up.lams[i])
+                    row_sizes.append(float(up.data_sizes[i]))
+            if not rows:
+                continue
+            held[t] = True
+            unified = jnp.stack(rows)
+            masks = jnp.stack(row_masks)
+            lams = jnp.asarray(row_lams, jnp.float32)
+            sizes = jnp.asarray(row_sizes, jnp.float32)
+            member = jnp.ones((len(rows),), bool)
+            th, mh = task_aggregate(unified, masks, lams, member, sizes, cfg.rho)
+            tau_hats = tau_hats.at[t].set(th)
+            m_hats = m_hats.at[t].set(mh)
+
+        # ---- Eq. 5 + 6 across tasks --------------------------------------
+        sim = sign_similarity(tau_hats)
+        held_arr = jnp.asarray(held)
+        # never transfer from/to tasks nobody held this round
+        sim = sim * held_arr[None, :] * held_arr[:, None]
+        if not cfg.cross_task:
+            weights = jnp.zeros_like(sim)
+        elif cfg.uniform_cross:
+            t = sim.shape[0]
+            weights = ((1.0 - jnp.eye(t)) * held_arr[None, :] * held_arr[:, None])
+            weights = weights / jnp.maximum(jnp.sum(weights, 1, keepdims=True), 1.0)
+        else:
+            weights = topk_similar(sim, cfg.eps, cfg.kappa)
+        tau_tildes = cross_task_aggregate(tau_hats, m_hats, weights)
+        task_vectors = combine_round(tau_hats, tau_tildes, weights)
+
+        self.last_similarity = sim
+        self.last_task_vectors = task_vectors
+
+        # ---- per-client re-unification + downlink ------------------------
+        out: Dict[int, ClientDownlink] = {}
+        for up in uploads:
+            tvs = jnp.stack([task_vectors[t] for t in up.task_ids])
+            unified, masks, lams = unify_with_modulators(tvs)
+            out[up.client_id] = ClientDownlink(unified, masks, lams)
+        return out

@@ -1,0 +1,63 @@
+"""Client-side local fine-tuning in flat task-vector space.
+
+One jitted trainer handles all strategies:
+
+* vanilla (FedAvg / MaTU / MaT-FL / FedPer / TIES):   CE loss
+* FedProx:  + (μ/2)·||τ − τ_anchor||²   (Li et al. 2020)
+* NTK-FedAvg:  trains the *linearised* model f(0) + J(0)·τ
+  (Muhamed et al. 2024) — implemented with jax.jvp, not an
+  approximation of the baseline but the actual mechanism.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+
+
+def make_local_trainer(backbone, *, steps: int, batch_size: int, lr: float,
+                       prox_mu: float = 0.0, linearize: bool = False):
+    """Returns train(tv0, head0, X, Y, rng) -> (tv, head, final_loss)."""
+
+    feats = backbone.lin_features if linearize else backbone.features
+    opt = adamw(lr)
+
+    def loss_fn(tv, head, xb, yb, anchor):
+        f = feats(tv, xb)
+        logits = f @ head
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
+        ce = jnp.mean(lse - gold)
+        if prox_mu > 0.0:
+            ce = ce + 0.5 * prox_mu * jnp.sum(jnp.square(tv - anchor))
+        return ce
+
+    @jax.jit
+    def train(tv0, head0, x, y, rng):
+        anchor = tv0
+        params = (tv0, head0)
+        state = opt.init(params)
+
+        def body(carry, key):
+            params, state = carry
+            idx = jax.random.randint(key, (batch_size,), 0, x.shape[0])
+            xb, yb = x[idx], y[idx]
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p[0], p[1], xb, yb, anchor))(params)
+            params, state = opt.update(grads, state, params)
+            return (params, state), loss
+
+        keys = jax.random.split(rng, steps)
+        (params, _), losses = jax.lax.scan(body, (params, state), keys)
+        return params[0], params[1], losses[-1]
+
+    return train
+
+
+def make_head(key, feat_out: int, n_classes: int) -> jax.Array:
+    return jax.random.normal(key, (feat_out, n_classes)) * 0.01

@@ -1,0 +1,253 @@
+"""Federated aggregation strategies: MaTU + all paper baselines.
+
+The simulator calls, per round:
+  ``task_init(client, task_index)``    → τ to start local training from
+  ``aggregate(uploads)``               → server step (strategy state)
+  ``eval_vectors(task_id)``            → list of τ to evaluate for a task
+  ``uplink_bits(uploads)``             → communicated bits this round
+
+``uploads`` is a list of :class:`Upload` (one per client) carrying the
+per-task fine-tuned vectors.  Each strategy decides what is *actually*
+transmitted (MaTU: unified vector + modulators; others: per-task
+adapters) — uplink accounting reflects that, reproducing the bpt
+columns of Tables 1–2.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import (cosine_similarity_matrix, greedy_group,
+                                  ties_merge, weighted_average)
+from repro.core.client import ClientDownlink, ClientUpload
+from repro.core.server import MaTUServer, MaTUServerConfig
+from repro.core.unify import modulate, unify_with_modulators
+
+FLOAT_BITS = 32
+
+
+@dataclass
+class Upload:
+    client_id: int
+    task_ids: List[int]
+    task_vectors: jax.Array     # (k, d) fine-tuned vectors, one per task
+    data_sizes: List[int]
+
+
+class Strategy:
+    name = "base"
+    needs_prox = False
+    needs_linearize = False
+
+    def __init__(self, n_tasks: int, d: int):
+        self.n_tasks, self.d = n_tasks, d
+
+    def task_init(self, client_id: int, task_id: int) -> jax.Array:
+        raise NotImplementedError
+
+    def aggregate(self, uploads: List[Upload]) -> None:
+        raise NotImplementedError
+
+    def eval_vectors(self, task_id: int) -> List[jax.Array]:
+        raise NotImplementedError
+
+    def uplink_bits(self, uploads: List[Upload]) -> int:
+        # default: one adapter per task per client (fp32)
+        return sum(FLOAT_BITS * self.d * len(u.task_ids) for u in uploads)
+
+
+# ---------------------------------------------------------------------------
+class MaTUStrategy(Strategy):
+    name = "matu"
+
+    def __init__(self, n_tasks: int, d: int, *, rho: float = 0.4,
+                 eps: float = 0.5, kappa: int = 3, cross_task: bool = True,
+                 uniform_cross: bool = False, compress: bool = False):
+        super().__init__(n_tasks, d)
+        self.server = MaTUServer(MaTUServerConfig(
+            n_tasks=n_tasks, rho=rho, eps=eps, kappa=kappa,
+            cross_task=cross_task, uniform_cross=uniform_cross))
+        self.downlinks: Dict[int, ClientDownlink] = {}
+        self.client_tasks: Dict[int, List[int]] = {}
+        # beyond-paper: bf16 vector + entropy-coded masks (repro.fed.compression)
+        self.compress = compress
+        self._last_uploads: List[ClientUpload] = []
+
+    def task_init(self, client_id: int, task_id: int) -> jax.Array:
+        dl = self.downlinks.get(client_id)
+        if dl is None:
+            return jnp.zeros((self.d,), jnp.float32)
+        i = self.client_tasks[client_id].index(task_id)
+        return modulate(dl.unified, dl.masks[i], dl.lams[i])
+
+    def aggregate(self, uploads: List[Upload]) -> None:
+        matu_ups = []
+        for u in uploads:
+            unified, masks, lams = unify_with_modulators(u.task_vectors)
+            if self.compress:
+                from repro.fed.compression import quantize_bf16
+                unified, _cos = quantize_bf16(unified)
+            matu_ups.append(ClientUpload(u.client_id, u.task_ids, unified,
+                                         masks, lams, u.data_sizes))
+            self.client_tasks[u.client_id] = list(u.task_ids)
+        self._last_uploads = matu_ups
+        self.downlinks.update(self.server.round(matu_ups))
+
+    def eval_vectors(self, task_id: int) -> List[jax.Array]:
+        return [self.server.last_task_vectors[task_id]]
+
+    def uplink_bits(self, uploads: List[Upload]) -> int:
+        if self.compress and self._last_uploads:
+            from repro.fed.compression import compressed_uplink_bits
+            return sum(compressed_uplink_bits(u.unified, u.masks)
+                       for u in self._last_uploads)
+        # ONE unified fp32 vector + per task (binary mask + scalar)
+        return sum(FLOAT_BITS * self.d + len(u.task_ids) * (self.d + FLOAT_BITS)
+                   for u in uploads)
+
+
+# ---------------------------------------------------------------------------
+class FedAvgStrategy(Strategy):
+    name = "fedavg"
+
+    def __init__(self, n_tasks: int, d: int):
+        super().__init__(n_tasks, d)
+        self.global_v = jnp.zeros((d,), jnp.float32)
+
+    def task_init(self, client_id: int, task_id: int) -> jax.Array:
+        return self.global_v
+
+    def aggregate(self, uploads: List[Upload]) -> None:
+        vecs, weights = [], []
+        for u in uploads:
+            for i, _t in enumerate(u.task_ids):
+                vecs.append(u.task_vectors[i])
+                weights.append(float(u.data_sizes[i]))
+        self.global_v = weighted_average(jnp.stack(vecs), jnp.asarray(weights))
+
+    def eval_vectors(self, task_id: int) -> List[jax.Array]:
+        return [self.global_v]
+
+
+class FedProxStrategy(FedAvgStrategy):
+    name = "fedprox"
+    needs_prox = True
+
+
+class NTKFedAvgStrategy(FedAvgStrategy):
+    """NTK-FedAvg: same server merge, but clients train the linearised
+    model (jvp at the pretrained point) — see repro.fed.local."""
+    name = "ntk-fedavg"
+    needs_linearize = True
+
+
+class TIESStrategy(Strategy):
+    name = "ties"
+
+    def __init__(self, n_tasks: int, d: int, keep_frac: float = 0.2):
+        super().__init__(n_tasks, d)
+        self.keep_frac = keep_frac
+        self.global_v = jnp.zeros((d,), jnp.float32)
+
+    def task_init(self, client_id: int, task_id: int) -> jax.Array:
+        return self.global_v
+
+    def aggregate(self, uploads: List[Upload]) -> None:
+        vecs = [u.task_vectors[i] for u in uploads for i in range(len(u.task_ids))]
+        self.global_v = ties_merge(jnp.stack(vecs), keep_frac=self.keep_frac)
+
+    def eval_vectors(self, task_id: int) -> List[jax.Array]:
+        return [self.global_v]
+
+
+# ---------------------------------------------------------------------------
+class FedPerStrategy(Strategy):
+    """FedPer: shared slice averaged globally; personal slice (later
+    layers) kept per-client.  Heads are always personal in our harness."""
+    name = "fedper"
+
+    def __init__(self, n_tasks: int, d: int, split_point: int):
+        super().__init__(n_tasks, d)
+        self.split = split_point
+        self.shared = jnp.zeros((split_point,), jnp.float32)
+        self.personal: Dict[int, jax.Array] = {}
+        self.holders: Dict[int, List[int]] = {t: [] for t in range(n_tasks)}
+
+    def task_init(self, client_id: int, task_id: int) -> jax.Array:
+        pers = self.personal.get(client_id, jnp.zeros((self.d - self.split,), jnp.float32))
+        return jnp.concatenate([self.shared, pers])
+
+    def aggregate(self, uploads: List[Upload]) -> None:
+        shared_vecs, weights = [], []
+        for u in uploads:
+            mean_tv = jnp.mean(u.task_vectors, axis=0)
+            shared_vecs.append(mean_tv[: self.split])
+            weights.append(float(sum(u.data_sizes)))
+            self.personal[u.client_id] = mean_tv[self.split:]
+            for t in u.task_ids:
+                if u.client_id not in self.holders[t]:
+                    self.holders[t].append(u.client_id)
+        self.shared = weighted_average(jnp.stack(shared_vecs), jnp.asarray(weights))
+
+    def eval_vectors(self, task_id: int) -> List[jax.Array]:
+        out = []
+        for c in self.holders[task_id]:
+            pers = self.personal.get(c)
+            if pers is not None:
+                out.append(jnp.concatenate([self.shared, pers]))
+        return out or [jnp.concatenate([self.shared,
+                                        jnp.zeros((self.d - self.split,), jnp.float32)])]
+
+    def uplink_bits(self, uploads: List[Upload]) -> int:
+        # clients transmit only the shared slice (per task)
+        return sum(FLOAT_BITS * self.split * len(u.task_ids) for u in uploads)
+
+
+# ---------------------------------------------------------------------------
+class MaTFLStrategy(Strategy):
+    """MaT-FL (Cai et al. 2023): dynamic grouping by cosine similarity of
+    client updates; aggregation within groups only."""
+    name = "mat-fl"
+
+    def __init__(self, n_tasks: int, d: int, threshold: float = 0.0):
+        super().__init__(n_tasks, d)
+        self.threshold = threshold
+        self.client_v: Dict[int, jax.Array] = {}
+        self.holders: Dict[int, List[int]] = {t: [] for t in range(n_tasks)}
+
+    def task_init(self, client_id: int, task_id: int) -> jax.Array:
+        return self.client_v.get(client_id, jnp.zeros((self.d,), jnp.float32))
+
+    def aggregate(self, uploads: List[Upload]) -> None:
+        ids = [u.client_id for u in uploads]
+        means = jnp.stack([jnp.mean(u.task_vectors, axis=0) for u in uploads])
+        sim = np.asarray(cosine_similarity_matrix(means))
+        groups = greedy_group(sim, self.threshold)
+        for g in groups:
+            gv = jnp.mean(means[jnp.asarray(g)], axis=0)
+            for i in g:
+                self.client_v[ids[i]] = gv
+        for u in uploads:
+            for t in u.task_ids:
+                if u.client_id not in self.holders[t]:
+                    self.holders[t].append(u.client_id)
+
+    def eval_vectors(self, task_id: int) -> List[jax.Array]:
+        out = [self.client_v[c] for c in self.holders[task_id] if c in self.client_v]
+        return out or [jnp.zeros((self.d,), jnp.float32)]
+
+
+STRATEGIES = {
+    "matu": MaTUStrategy,
+    "fedavg": FedAvgStrategy,
+    "fedprox": FedProxStrategy,
+    "ntk-fedavg": NTKFedAvgStrategy,
+    "ties": TIESStrategy,
+    "fedper": FedPerStrategy,
+    "mat-fl": MaTFLStrategy,
+}

@@ -1,0 +1,107 @@
+"""Backbones for federated experiments, exposing a flat LoRA task-vector
+space (the d-dimensional space MaTU operates in).
+
+Two implementations:
+
+* :class:`MLPBackbone` — fast CPU testbed used by the paper-claim
+  benchmarks (frozen 2-layer MLP + LoRA on both layers).
+* :class:`ViTBackbone` — the paper's actual model family (ViT + LoRA
+  rank 16 on attention/MLP), used in the integration test and the
+  quickstart; slower but exercises the real model zoo.
+
+Both expose:
+  d                     — task-vector dimension
+  features(tv, x)       — (B, feat_out) features under LoRA vector tv
+  lin_features(tv, x)   — NTK-linearised features at the pretrained
+                          point (jax.jvp), for the NTK-FedAvg baseline
+  split_point           — index splitting "shared" vs "personal" slices
+                          of the flat vector (FedPer)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.tree import tree_flatten_vector, tree_unflatten_vector
+
+
+class MLPBackbone:
+    def __init__(self, feat_dim: int, hidden: int = 64, lora_rank: int = 4,
+                 seed: int = 0):
+        k = jax.random.PRNGKey(seed)
+        k1, k2, k3, k4 = jax.random.split(k, 4)
+        self.w1 = jax.random.normal(k1, (feat_dim, hidden)) / math.sqrt(feat_dim)
+        self.w2 = jax.random.normal(k2, (hidden, hidden)) / math.sqrt(hidden)
+        self.rank = lora_rank
+        # The task vector is a DELTA over the standard LoRA init
+        # (A gaussian, B zero): τ = 0 is exactly the pretrained point,
+        # and gradients flow (A=B=0 would be a saddle).
+        self.lora0 = {
+            "l1": {"a": jax.random.normal(k3, (feat_dim, lora_rank)) / math.sqrt(feat_dim),
+                   "b": jnp.zeros((lora_rank, hidden))},
+            "l2": {"a": jax.random.normal(k4, (hidden, lora_rank)) / math.sqrt(hidden),
+                   "b": jnp.zeros((lora_rank, hidden))},
+        }
+        self.template = jax.tree_util.tree_map(jnp.zeros_like, self.lora0)
+        self.d = int(sum(x.size for x in jax.tree_util.tree_leaves(self.template)))
+        self.feat_out = hidden
+        # FedPer split: layer-1 LoRA shared, layer-2 LoRA personal
+        self.split_point = int(self.template["l1"]["a"].size + self.template["l1"]["b"].size)
+
+    def _unflatten(self, tv: jax.Array):
+        delta = tree_unflatten_vector(tv, self.template)
+        return jax.tree_util.tree_map(jnp.add, self.lora0, delta)
+
+    def features(self, tv: jax.Array, x: jax.Array) -> jax.Array:
+        l = self._unflatten(tv)
+        h = x @ (self.w1 + l["l1"]["a"] @ l["l1"]["b"])
+        h = jax.nn.gelu(h)
+        h = h @ (self.w2 + l["l2"]["a"] @ l["l2"]["b"])
+        return jax.nn.gelu(h)
+
+    def lin_features(self, tv: jax.Array, x: jax.Array) -> jax.Array:
+        zero = jnp.zeros_like(tv)
+        f0, jvp_out = jax.jvp(lambda v: self.features(v, x), (zero,), (tv,))
+        return f0 + jvp_out
+
+
+class ViTBackbone:
+    def __init__(self, seed: int = 0, reduced: bool = True):
+        from repro.configs.vit_b32 import CONFIG, build, reduced_vit
+        cfg = reduced_vit() if reduced else CONFIG
+        self.cfg = cfg
+        self.vit = build(cfg)
+        k = jax.random.PRNGKey(seed)
+        self.params = self.vit.init(k)
+        # task vector = delta over the standard LoRA init (A≠0, B=0)
+        self.lora0 = self.vit.lora_init(jax.random.PRNGKey(seed + 1), cfg.lora_rank)
+        self.template = jax.tree_util.tree_map(jnp.zeros_like, self.lora0)
+        self.d = int(sum(x.size for x in jax.tree_util.tree_leaves(self.template)))
+        self.feat_out = cfg.d_model
+        self.split_point = self.d // 2  # FedPer: later layers personal
+        self.feat_dim = cfg.patch_dim * cfg.n_patches
+
+    def _unflatten(self, tv: jax.Array):
+        delta = tree_unflatten_vector(tv, self.template)
+        return jax.tree_util.tree_map(jnp.add, self.lora0, delta)
+
+    def features(self, tv: jax.Array, x: jax.Array) -> jax.Array:
+        # x arrives either flat (B, n_patches*patch_dim) or patch-sized
+        # (B, patch_dim) — the latter is tiled across patches, which
+        # keeps synthetic rotation tasks undoable by patch-level LoRA.
+        if x.shape[-1] == self.cfg.patch_dim:
+            patches = jnp.broadcast_to(x[:, None, :],
+                                       (x.shape[0], self.cfg.n_patches,
+                                        self.cfg.patch_dim))
+        else:
+            patches = x.reshape(x.shape[0], self.cfg.n_patches, self.cfg.patch_dim)
+        return self.vit.features(self.params, patches, lora=self._unflatten(tv))
+
+    def lin_features(self, tv: jax.Array, x: jax.Array) -> jax.Array:
+        zero = jnp.zeros_like(tv)
+        f0, jvp_out = jax.jvp(lambda v: self.features(v, x), (zero,), (tv,))
+        return f0 + jvp_out

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: fused Eq. 3 + Eq. 4 (agreement mask + task merge).
+
+Per task t the server computes, over the N_t member clients,
+  α_j  = |Σ_n sgn(m_n ⊙ τ_n)_j| / N_t
+  m̂_j  = 1 if α_j ≥ ρ else α_j
+  τ̂_j  = m̂_j · Σ_n γ_n λ_n (m_n ⊙ τ_n)_j
+
+A naive composition reads the (N, d) stack three times (sign-sum,
+agreement compare, weighted sum) and materialises two (N, d)
+intermediates in HBM.  The kernel streams each (N, BD) block through
+VMEM once, producing both outputs — HBM traffic drops from ~5·N·d to
+(N+2)·d words.
+
+The per-client scalars (λ, γ) are small (N ≤ 64) and ride fully
+resident; ρ is compile-time static.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 2048
+
+
+def _masked_agg_kernel(u_ref, m_ref, lam_ref, gam_ref, tau_ref, mhat_ref, *, rho):
+    u = u_ref[...].astype(jnp.float32)            # (N, BD)
+    m = m_ref[...].astype(jnp.float32)            # (N, BD)
+    lam = lam_ref[...].astype(jnp.float32)        # (N,)
+    gam = gam_ref[...].astype(jnp.float32)        # (N,)
+    member = (gam > 0).astype(jnp.float32)
+    n_t = jnp.maximum(jnp.sum(member), 1.0)
+    masked = u * m
+    signs = jnp.sign(masked)
+    alpha = jnp.abs(jnp.sum(member[:, None] * signs, axis=0)) / n_t
+    m_hat = jnp.where(alpha >= rho, 1.0, alpha)
+    weighted = jnp.sum((gam * lam)[:, None] * masked, axis=0)
+    tau_ref[...] = (weighted * m_hat).astype(tau_ref.dtype)
+    mhat_ref[...] = m_hat.astype(mhat_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "block_d", "interpret"))
+def masked_agg_pallas(unified: jax.Array, masks: jax.Array, lams: jax.Array,
+                      gammas: jax.Array, *, rho: float = 0.4,
+                      block_d: int = BLOCK_D, interpret: bool = True):
+    """unified (N,d); masks (N,d) {0,1}; lams/gammas (N,).
+
+    gammas must be the normalised membership weights (0 for
+    non-members); N_t is inferred as the count of positive gammas.
+    Returns (tau_hat (d,), m_hat (d,)) in fp32.
+    """
+    n, d = unified.shape
+    pad = (-d) % block_d
+    if pad:
+        unified = jnp.pad(unified, ((0, 0), (0, pad)))
+        masks = jnp.pad(masks, ((0, 0), (0, pad)))
+    dp = d + pad
+    kernel = functools.partial(_masked_agg_kernel, rho=rho)
+    tau, m_hat = pl.pallas_call(
+        kernel,
+        grid=(dp // block_d,),
+        in_specs=[
+            pl.BlockSpec((n, block_d), lambda i: (0, i)),
+            pl.BlockSpec((n, block_d), lambda i: (0, i)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_d,), lambda i: (i,)),
+            pl.BlockSpec((block_d,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((dp,), jnp.float32),
+            jax.ShapeDtypeStruct((dp,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(unified, masks.astype(unified.dtype), lams, gammas)
+    return tau[:d], m_hat[:d]

@@ -1,0 +1,48 @@
+"""Jit'd dispatch layer over the Pallas kernels.
+
+On TPU the kernels compile natively; everywhere else (this CPU
+container, unit tests) they run in ``interpret=True`` mode, which
+executes the kernel body in Python — bit-identical semantics, so the
+allclose sweeps in tests/test_kernels.py validate the TPU code path.
+
+Set ``REPRO_DISABLE_PALLAS=1`` to force the pure-jnp reference
+implementations (used by A/B numerics checks).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.masked_agg import masked_agg_pallas
+from repro.kernels.sign_sim import sign_sim_pallas
+from repro.kernels.unify import unify_pallas
+
+
+def _use_pallas() -> bool:
+    return os.environ.get("REPRO_DISABLE_PALLAS", "0") != "1"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def unify(task_vectors: jax.Array) -> jax.Array:
+    if _use_pallas():
+        return unify_pallas(task_vectors, interpret=_interpret())
+    return ref.unify_ref(task_vectors)
+
+
+def masked_agg(unified, masks, lams, gammas, *, rho: float = 0.4):
+    if _use_pallas():
+        return masked_agg_pallas(unified, masks, lams, gammas, rho=rho,
+                                 interpret=_interpret())
+    return ref.masked_agg_ref(unified, masks, lams, gammas, rho)
+
+
+def sign_sim(tau_hats: jax.Array) -> jax.Array:
+    if _use_pallas():
+        return sign_sim_pallas(tau_hats, interpret=_interpret())
+    return ref.sign_sim_ref(tau_hats)

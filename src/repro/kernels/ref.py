@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (the reference semantics).
+
+These mirror ``repro.core`` math exactly; kernel tests sweep shapes and
+dtypes asserting allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def unify_ref(task_vectors: jax.Array) -> jax.Array:
+    """(K, d) -> (d,): sign election + max-|.| magnitude (Eq. 2)."""
+    x = task_vectors.astype(jnp.float32)
+    sigma = jnp.sign(jnp.sum(x, axis=0))
+    aligned = (x * sigma[None, :]) > 0
+    mu = jnp.max(jnp.abs(x) * aligned, axis=0)
+    return sigma * mu
+
+
+def masked_agg_ref(unified: jax.Array, masks: jax.Array, lams: jax.Array,
+                   gammas: jax.Array, rho: float):
+    """Eq. 3 + Eq. 4 fused for one task.
+
+    unified (N, d); masks (N, d) {0,1}; lams (N,); gammas (N,) already
+    normalised membership·|D| weights (zero rows = non-members).
+    Returns (tau_hat (d,), m_hat (d,)).
+    """
+    u = unified.astype(jnp.float32)
+    m = masks.astype(jnp.float32)
+    member = (gammas > 0).astype(jnp.float32)
+    n_t = jnp.maximum(jnp.sum(member), 1.0)
+    signs = jnp.sign(u * m)
+    alpha = jnp.abs(jnp.einsum("n,nd->d", member, signs)) / n_t
+    m_hat = jnp.where(alpha >= rho, 1.0, alpha)
+    recon = lams[:, None].astype(jnp.float32) * (u * m)
+    tau_hat = jnp.einsum("n,nd->d", gammas.astype(jnp.float32), recon) * m_hat
+    return tau_hat, m_hat
+
+
+def sign_sim_ref(tau_hats: jax.Array) -> jax.Array:
+    """Eq. 5: S = ½(sgn(T)·sgn(T)ᵀ/d + 1) over (T, d) -> (T, T)."""
+    x = tau_hats.astype(jnp.float32)
+    d = x.shape[-1]
+    s = jnp.sign(x)
+    return 0.5 * (s @ s.T / d + 1.0)

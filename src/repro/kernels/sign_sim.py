@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: sign-conflict task similarity (Eq. 5) as an MXU matmul.
+
+The jnp form is an elementwise sign + (T, d) @ (d, T) in fp32.  At
+full-fine-tune scale d ~ 10⁸ and T ~ 30, so the op is a skinny
+memory-bound matmul.  The kernel tiles d, signs each (T, BD) tile in
+VMEM, and accumulates the (T, T) partial product across the grid —
+the sign tile never round-trips to HBM (the XLA version materialises
+the full sgn(T) matrix first: 2× traffic).
+
+Grid iterates over d; the (T, T) output block is revisited every step
+(accumulation pattern: zero on first step, add afterwards).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 2048
+
+
+def _sign_sim_kernel(x_ref, acc_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (T, BD)
+    s = jnp.sign(x)
+    acc_ref[...] += jnp.dot(s, s.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def sign_sim_pallas(tau_hats: jax.Array, *, block_d: int = BLOCK_D,
+                    interpret: bool = True) -> jax.Array:
+    """(T, d) -> (T, T) similarity in [0, 1]. Zero-padding d is safe:
+    sgn(0)·sgn(0) = 0 contributes nothing."""
+    t, d = tau_hats.shape
+    pad = (-d) % block_d
+    if pad:
+        tau_hats = jnp.pad(tau_hats, ((0, 0), (0, pad)))
+    dp = d + pad
+    dots = pl.pallas_call(
+        _sign_sim_kernel,
+        grid=(dp // block_d,),
+        in_specs=[pl.BlockSpec((t, block_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((t, t), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, t), jnp.float32),
+        interpret=interpret,
+    )(tau_hats)
+    return 0.5 * (dots / d + 1.0)

@@ -1,0 +1,48 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Single-pod: 256 chips as (16, 16) → ("data", "model").
+Multi-pod:  2 × 256 chips as (2, 16, 16) → ("pod", "data", "model").
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so that
+importing this module never touches jax device state — the dry-run
+sets XLA_FLAGS for 512 host devices before any jax import; smoke tests
+and benches see the single real CPU device.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Optional
+
+import jax
+
+# TPU v5e hardware constants (per chip) — used by the roofline report.
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # B/s
+ICI_BW = 50e9                  # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CI-scale sharding tests (8 host devices)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def arch_rules(cfg, mesh) -> Mapping[str, object]:
+    """Per-arch logical-axis rule overrides (DESIGN.md §5).
+
+    kv_heads shard over ``model`` only when the head count divides the
+    axis (codeqwen MHA); otherwise KV stays replicated (standard GQA
+    tensor parallelism).
+    """
+    n_model = mesh.shape.get("model", 1)
+    rules = {}
+    if cfg.n_kv_heads and cfg.n_kv_heads % n_model == 0 and not cfg.use_mla:
+        rules["kv_heads"] = "model"
+    return rules

@@ -1,0 +1,213 @@
+"""Composable transformer blocks with a uniform (train/prefill/decode) API.
+
+Every block type exposes:
+
+* ``__call__(params, x, *, positions, lora, impl) -> (x, aux)``
+* ``prefill(params, x, cache, *, positions, lora, impl) -> (x, cache, aux)``
+* ``decode_step(params, x, cache, pos, *, lora) -> (x, cache)``
+* ``init_cache(batch, max_len, dtype)`` / ``cache_axes()``
+
+so the LM can ``lax.scan`` over stacked per-layer parameters regardless
+of the mixer family.  SSM blocks (MLSTMBlock/SLSTMBlock/Mamba) manage
+their own norms/residuals; this module adapts them to the same API.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import Attention
+from repro.nn.mla import MLAttention
+from repro.nn.mlp import GeluMLP, SwiGLU
+from repro.nn.module import LayerNorm, Module, RMSNorm
+from repro.nn.moe import MoE
+from repro.nn.ssm import Mamba, MLSTMBlock, SLSTMBlock
+
+PyTree = Any
+
+
+class Block(Module):
+    """Pre-norm residual block: mixer (attention/MLA/hybrid) + optional FFN."""
+
+    def __init__(self, d_model: int, mixer: Module, ffn: Optional[Module], *,
+                 norm_cls=RMSNorm, dtype=jnp.float32):
+        self.d_model, self.mixer, self.ffn = d_model, mixer, ffn
+        self.norm1 = norm_cls(d_model, dtype=dtype)
+        self.norm2 = norm_cls(d_model, dtype=dtype) if ffn is not None else None
+        self.dtype = dtype
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        p = {"norm1": self.norm1.init(None), "mixer": self.mixer.init(k1)}
+        if self.ffn is not None:
+            p["norm2"] = self.norm2.init(None)
+            p["ffn"] = self.ffn.init(k2)
+        return p
+
+    def axes(self):
+        a = {"norm1": self.norm1.axes(), "mixer": self.mixer.axes()}
+        if self.ffn is not None:
+            a["norm2"] = self.norm2.axes()
+            a["ffn"] = self.ffn.axes()
+        return a
+
+    def lora_init(self, key, rank: int):
+        k1, k2 = jax.random.split(key)
+        out = {"mixer": self.mixer.lora_init(k1, rank)}
+        if self.ffn is not None and hasattr(self.ffn, "lora_init"):
+            out["ffn"] = self.ffn.lora_init(k2, rank)
+        return out
+
+    def lora_axes(self):
+        out = {"mixer": self.mixer.lora_axes()}
+        if self.ffn is not None and hasattr(self.ffn, "lora_axes"):
+            out["ffn"] = self.ffn.lora_axes()
+        return out
+
+    def _ffn_apply(self, params, x, lora):
+        lora = lora or {}
+        y = self.ffn(params["ffn"], self.norm2(params["norm2"], x), lora.get("ffn"))
+        aux = getattr(self.ffn, "last_aux", jnp.zeros((), jnp.float32))
+        return x + y, aux
+
+    def __call__(self, params, x, *, positions=None, lora=None, impl="full"):
+        lora = lora or {}
+        h = self.mixer(params["mixer"], self.norm1(params["norm1"], x),
+                       positions=positions, lora=lora.get("mixer"), impl=impl)
+        x = x + h
+        if self.ffn is None:
+            return x, jnp.zeros((), jnp.float32)
+        return self._ffn_apply(params, x, lora)
+
+    # -- serving -----------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        return self.mixer.init_cache(batch, max_len, dtype)
+
+    def cache_axes(self):
+        return self.mixer.cache_axes()
+
+    def prefill(self, params, x, cache, *, positions=None, lora=None, impl="chunked"):
+        lora = lora or {}
+        h, cache = self.mixer.prefill(params["mixer"], self.norm1(params["norm1"], x), cache,
+                                      positions=positions, lora=lora.get("mixer"), impl=impl)
+        x = x + h
+        if self.ffn is None:
+            return x, cache, jnp.zeros((), jnp.float32)
+        x, aux = self._ffn_apply(params, x, lora)
+        return x, cache, aux
+
+    def decode_step(self, params, x, cache, pos, *, lora=None):
+        lora = lora or {}
+        h, cache = self.mixer.decode_step(params["mixer"], self.norm1(params["norm1"], x),
+                                          cache, pos, lora=lora.get("mixer"))
+        x = x + h
+        if self.ffn is not None:
+            x, _ = self._ffn_apply(params, x, lora)
+        return x, cache
+
+
+class SSMBlockAdapter(Module):
+    """Adapts MLSTMBlock / SLSTMBlock / Mamba-with-own-residual to Block API."""
+
+    def __init__(self, inner: Module):
+        self.inner = inner
+
+    def init(self, key):
+        return self.inner.init(key)
+
+    def axes(self):
+        return self.inner.axes()
+
+    def lora_init(self, key, rank):
+        return self.inner.lora_init(key, rank)
+
+    def lora_axes(self):
+        return self.inner.lora_axes()
+
+    def init_cache(self, batch, max_len, dtype=None):
+        return self.inner.init_cache(batch, max_len, dtype)
+
+    def cache_axes(self):
+        return self.inner.cache_axes()
+
+    def __call__(self, params, x, *, positions=None, lora=None, impl="full"):
+        del positions, impl
+        y, _ = self.inner.forward(params, x, lora=lora)
+        return y, jnp.zeros((), jnp.float32)
+
+    def prefill(self, params, x, cache, *, positions=None, lora=None, impl="chunked"):
+        del positions, impl
+        y, cache = self.inner.forward(params, x, lora=lora, state=cache)
+        return y, cache, jnp.zeros((), jnp.float32)
+
+    def decode_step(self, params, x, cache, pos, *, lora=None):
+        y, cache = self.inner.decode_step(params, x, cache, pos, lora=lora)
+        return y, cache
+
+
+class HybridMixer(Module):
+    """Hymba-style parallel attention ‖ mamba heads on the same input.
+
+    Branch outputs are individually RMS-normalised and fused with a
+    learnable per-branch scale (β), then mean-combined — matching the
+    hymba fusion (arXiv:2411.13676 §2)."""
+
+    def __init__(self, d_model: int, attn: Attention, mamba: Mamba, *, dtype=jnp.float32):
+        self.d_model, self.attn, self.mamba, self.dtype = d_model, attn, mamba, dtype
+        self.norm_a = RMSNorm(d_model, dtype=dtype)
+        self.norm_m = RMSNorm(d_model, dtype=dtype)
+
+    def init(self, key):
+        ka, km = jax.random.split(key)
+        return {"attn": self.attn.init(ka), "mamba": self.mamba.init(km),
+                "norm_a": self.norm_a.init(None), "norm_m": self.norm_m.init(None),
+                "beta": jnp.ones((2,), self.dtype)}
+
+    def axes(self):
+        return {"attn": self.attn.axes(), "mamba": self.mamba.axes(),
+                "norm_a": self.norm_a.axes(), "norm_m": self.norm_m.axes(),
+                "beta": (None,)}
+
+    def lora_init(self, key, rank):
+        ka, km = jax.random.split(key)
+        return {"attn": self.attn.lora_init(ka, rank), "mamba": self.mamba.lora_init(km, rank)}
+
+    def lora_axes(self):
+        return {"attn": self.attn.lora_axes(), "mamba": self.mamba.lora_axes()}
+
+    def _fuse(self, params, ya, ym):
+        ya = self.norm_a(params["norm_a"], ya)
+        ym = self.norm_m(params["norm_m"], ym)
+        return 0.5 * (params["beta"][0] * ya + params["beta"][1] * ym)
+
+    def __call__(self, params, x, *, positions=None, lora=None, impl="full"):
+        lora = lora or {}
+        ya = self.attn(params["attn"], x, positions=positions, lora=lora.get("attn"), impl=impl)
+        ym = self.mamba(params["mamba"], x, lora=lora.get("mamba"))
+        return self._fuse(params, ya, ym)
+
+    def init_cache(self, batch, max_len, dtype=None):
+        return {"attn": self.attn.init_cache(batch, max_len, dtype),
+                "mamba": self.mamba.init_cache(batch, max_len, dtype)}
+
+    def cache_axes(self):
+        return {"attn": self.attn.cache_axes(), "mamba": self.mamba.cache_axes()}
+
+    def prefill(self, params, x, cache, *, positions=None, lora=None, impl="chunked"):
+        lora = lora or {}
+        ya, ca = self.attn.prefill(params["attn"], x, cache["attn"],
+                                   positions=positions, lora=lora.get("attn"), impl=impl)
+        ym, cm = self.mamba.forward(params["mamba"], x, lora=lora.get("mamba"),
+                                    state=cache["mamba"])
+        return self._fuse(params, ya, ym), {"attn": ca, "mamba": cm}
+
+    def decode_step(self, params, x, cache, pos, *, lora=None):
+        lora = lora or {}
+        ya, ca = self.attn.decode_step(params["attn"], x, cache["attn"], pos,
+                                       lora=lora.get("attn"))
+        ym, cm = self.mamba.decode_step(params["mamba"], x, cache["mamba"],
+                                        lora=lora.get("mamba"))
+        return self._fuse(params, ya, ym), {"attn": ca, "mamba": cm}

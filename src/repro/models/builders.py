@@ -1,0 +1,143 @@
+"""Assemble models from ArchConfig (one builder per family).
+
+``build_model`` returns an object with the uniform interface the
+launcher/trainer/tests rely on:
+
+* ``init(key)`` / ``lora_init(key)`` / ``axes()`` / ``lora_axes()``
+* ``loss(params, lora, batch)``
+* ``prefill_step(params, lora, batch, cache)``
+* ``decode_fn(params, lora, batch, cache, pos)``
+* ``init_cache(batch, max_len)`` / ``cache_axes()``
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.blocks import Block, HybridMixer, SSMBlockAdapter
+from repro.models.encdec import EncDecLM
+from repro.models.lm import LM
+from repro.nn.attention import Attention
+from repro.nn.mla import MLAttention
+from repro.nn.mlp import SwiGLU
+from repro.nn.moe import MoE
+from repro.nn.ssm import Mamba, MLSTMBlock, SLSTMBlock
+
+PyTree = Any
+
+
+class ArchModel:
+    """Uniform facade over LM / EncDecLM for one (config, shape) pair."""
+
+    def __init__(self, cfg: ArchConfig, model, kind: str):
+        self.cfg = cfg
+        self.model = model
+        self.kind = kind  # "lm" | "encdec"
+
+    # -- params ---------------------------------------------------------
+    def init(self, key):
+        return self.model.init(key)
+
+    def lora_init(self, key):
+        return self.model.lora_init(key, self.cfg.lora_rank)
+
+    def axes(self):
+        return self.model.axes()
+
+    def lora_axes(self):
+        return self.model.lora_axes()
+
+    # -- steps ----------------------------------------------------------
+    def loss(self, params, lora, batch):
+        return self.model.loss(params, lora, batch)
+
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        return self.model.init_cache(batch, max_len, dtype)
+
+    def cache_axes(self):
+        return self.model.cache_axes()
+
+    def prefill_step(self, params, lora, batch, cache, impl="chunked"):
+        return self.model.prefill(params, lora, batch, cache, impl=impl)
+
+    def decode_fn(self, params, lora, batch, cache, pos):
+        return self.model.decode_step(params, lora, batch["tokens"], cache, pos)
+
+
+def _attention(cfg: ArchConfig, *, window: Optional[int]) -> Attention:
+    return Attention(
+        cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+        head_dim=cfg.head_dim,
+        qkv_bias=cfg.qkv_bias,
+        rope=True, rope_base=cfg.rope_base,
+        mrope_sections=cfg.mrope_sections,
+        window=window,
+        dtype=cfg.dtype,
+    )
+
+
+def build_model(cfg: ArchConfig, shape: Optional[ShapeSpec] = None) -> ArchModel:
+    window = cfg.window_for_shape(shape) if shape is not None else None
+    dt = cfg.dtype
+
+    if cfg.family in ("dense", "vlm"):
+        mixer = _attention(cfg, window=window)
+        block = Block(cfg.d_model, mixer, SwiGLU(cfg.d_model, cfg.d_ff, dtype=dt), dtype=dt)
+        lm = LM(vocab=cfg.vocab, d_model=cfg.d_model, n_units=cfg.n_layers,
+                unit_blocks=[("blk", block)], tie_embeddings=cfg.tie_embeddings,
+                mrope=cfg.mrope_sections is not None, remat=cfg.remat, dtype=dt)
+        return ArchModel(cfg, lm, "lm")
+
+    if cfg.family == "moe":
+        if cfg.use_mla:
+            mixer = MLAttention(
+                cfg.d_model, cfg.n_heads,
+                q_lora_rank=cfg.q_lora_rank, kv_lora_rank=cfg.kv_lora_rank,
+                qk_nope_dim=cfg.qk_nope_dim, qk_rope_dim=cfg.qk_rope_dim,
+                v_head_dim=cfg.v_head_dim, rope_base=cfg.rope_base,
+                window=window, dtype=dt)
+        else:
+            mixer = _attention(cfg, window=window)
+        ffn = MoE(cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.top_k,
+                  n_shared=cfg.n_shared_experts, shared_d_ff=cfg.shared_d_ff,
+                  capacity_factor=cfg.moe_capacity_factor, dtype=dt)
+        block = Block(cfg.d_model, mixer, ffn, dtype=dt)
+        lm = LM(vocab=cfg.vocab, d_model=cfg.d_model, n_units=cfg.n_layers,
+                unit_blocks=[("blk", block)], tie_embeddings=cfg.tie_embeddings,
+                remat=cfg.remat, dtype=dt)
+        return ArchModel(cfg, lm, "lm")
+
+    if cfg.family == "ssm":  # xLSTM: alternating mLSTM/sLSTM pairs
+        assert cfg.n_layers % 2 == 0
+        mlstm = SSMBlockAdapter(MLSTMBlock(cfg.d_model, cfg.n_heads,
+                                           chunk=cfg.mlstm_chunk, dtype=dt))
+        slstm = SSMBlockAdapter(SLSTMBlock(cfg.d_model, cfg.n_heads, dtype=dt))
+        lm = LM(vocab=cfg.vocab, d_model=cfg.d_model, n_units=cfg.n_layers // 2,
+                unit_blocks=[("mlstm", mlstm), ("slstm", slstm)],
+                tie_embeddings=cfg.tie_embeddings, remat=cfg.remat, dtype=dt)
+        return ArchModel(cfg, lm, "lm")
+
+    if cfg.family == "hybrid":  # hymba: parallel attention ‖ mamba heads
+        attn = _attention(cfg, window=window if window is not None else cfg.hybrid_window)
+        mamba = Mamba(cfg.d_model, d_state=cfg.ssm_state, dtype=dt)
+        mixer = HybridMixer(cfg.d_model, attn, mamba, dtype=dt)
+        block = Block(cfg.d_model, mixer, SwiGLU(cfg.d_model, cfg.d_ff, dtype=dt), dtype=dt)
+        lm = LM(vocab=cfg.vocab, d_model=cfg.d_model, n_units=cfg.n_layers,
+                unit_blocks=[("blk", block)], tie_embeddings=cfg.tie_embeddings,
+                remat=cfg.remat, dtype=dt)
+        return ArchModel(cfg, lm, "lm")
+
+    if cfg.family == "audio":  # whisper: enc-dec
+        max_dec = max(448, shape.seq_len if shape is not None else 448)
+        model = EncDecLM(vocab=cfg.vocab, d_model=cfg.d_model,
+                         n_enc_layers=cfg.n_layers, n_dec_layers=cfg.n_layers,
+                         n_heads=cfg.n_heads, d_ff=cfg.d_ff,
+                         max_dec_len=max_dec, enc_frames=cfg.enc_frames,
+                         remat=cfg.remat, dtype=dt)
+        return ArchModel(cfg, model, "encdec")
+
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,322 @@
+"""Encoder-decoder LM (whisper-large-v3 backbone).
+
+The mel-spectrogram + conv feature extractor is STUBBED per the brief:
+``input_specs()`` supplies precomputed frame embeddings (B, T_enc, d) —
+we implement the transformer encoder over those frames and the full
+autoregressive decoder (self-attn + cross-attn), including serving with
+a cross-KV cache computed once at prefill.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import chunked_cross_entropy, cross_entropy
+from repro.nn.attention import Attention
+from repro.nn.mlp import GeluMLP
+from repro.nn.module import Dense, Embedding, LayerNorm, Module
+from repro.nn.sharding import constrain
+
+PyTree = Any
+
+
+def sinusoidal_positions(length: int, dim: int) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) * (-math.log(10000.0) / dim))
+    pe = jnp.zeros((length, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+class EncoderBlock(Module):
+    def __init__(self, d_model, n_heads, d_ff, dtype=jnp.float32):
+        self.attn = Attention(d_model, n_heads, n_heads, qkv_bias=True, out_bias=True,
+                              rope=False, causal=False, dtype=dtype)
+        self.mlp = GeluMLP(d_model, d_ff, dtype=dtype)
+        self.ln1 = LayerNorm(d_model, dtype=dtype)
+        self.ln2 = LayerNorm(d_model, dtype=dtype)
+
+    def init(self, key):
+        ka, km = jax.random.split(key)
+        return {"ln1": self.ln1.init(None), "attn": self.attn.init(ka),
+                "ln2": self.ln2.init(None), "mlp": self.mlp.init(km)}
+
+    def axes(self):
+        return {"ln1": self.ln1.axes(), "attn": self.attn.axes(),
+                "ln2": self.ln2.axes(), "mlp": self.mlp.axes()}
+
+    def lora_init(self, key, rank):
+        ka, km = jax.random.split(key)
+        return {"attn": self.attn.lora_init(ka, rank), "mlp": self.mlp.lora_init(km, rank)}
+
+    def lora_axes(self):
+        return {"attn": self.attn.lora_axes(), "mlp": self.mlp.lora_axes()}
+
+    def __call__(self, params, x, *, lora=None, impl="auto"):
+        lora = lora or {}
+        x = x + self.attn(params["attn"], self.ln1(params["ln1"], x),
+                          lora=lora.get("attn"), impl=impl)
+        x = x + self.mlp(params["mlp"], self.ln2(params["ln2"], x), lora.get("mlp"))
+        return x
+
+
+class DecoderBlock(Module):
+    def __init__(self, d_model, n_heads, d_ff, dtype=jnp.float32):
+        self.self_attn = Attention(d_model, n_heads, n_heads, qkv_bias=True, out_bias=True,
+                                   rope=False, causal=True, dtype=dtype)
+        self.cross_attn = Attention(d_model, n_heads, n_heads, qkv_bias=True, out_bias=True,
+                                    rope=False, causal=False, cross=True, dtype=dtype)
+        self.mlp = GeluMLP(d_model, d_ff, dtype=dtype)
+        self.ln1 = LayerNorm(d_model, dtype=dtype)
+        self.ln2 = LayerNorm(d_model, dtype=dtype)
+        self.ln3 = LayerNorm(d_model, dtype=dtype)
+
+    def init(self, key):
+        ks, kc, km = jax.random.split(key, 3)
+        return {"ln1": self.ln1.init(None), "self_attn": self.self_attn.init(ks),
+                "ln2": self.ln2.init(None), "cross_attn": self.cross_attn.init(kc),
+                "ln3": self.ln3.init(None), "mlp": self.mlp.init(km)}
+
+    def axes(self):
+        return {"ln1": self.ln1.axes(), "self_attn": self.self_attn.axes(),
+                "ln2": self.ln2.axes(), "cross_attn": self.cross_attn.axes(),
+                "ln3": self.ln3.axes(), "mlp": self.mlp.axes()}
+
+    def lora_init(self, key, rank):
+        ks, kc, km = jax.random.split(key, 3)
+        return {"self_attn": self.self_attn.lora_init(ks, rank),
+                "cross_attn": self.cross_attn.lora_init(kc, rank),
+                "mlp": self.mlp.lora_init(km, rank)}
+
+    def lora_axes(self):
+        return {"self_attn": self.self_attn.lora_axes(),
+                "cross_attn": self.cross_attn.lora_axes(),
+                "mlp": self.mlp.lora_axes()}
+
+    def __call__(self, params, x, enc_out, *, lora=None, impl="auto"):
+        lora = lora or {}
+        x = x + self.self_attn(params["self_attn"], self.ln1(params["ln1"], x),
+                               lora=lora.get("self_attn"), impl=impl)
+        x = x + self.cross_attn(params["cross_attn"], self.ln2(params["ln2"], x),
+                                kv_input=enc_out, lora=lora.get("cross_attn"))
+        x = x + self.mlp(params["mlp"], self.ln3(params["ln3"], x), lora.get("mlp"))
+        return x
+
+    # -- serving ------------------------------------------------------------
+    def init_cache(self, batch, max_len, dtype=None):
+        return {"self": self.self_attn.init_cache(batch, max_len, dtype)}
+
+    def cache_axes(self):
+        return {"self": self.self_attn.cache_axes(),
+                "cross": {"k": ("batch", None, "kv_heads", "head_dim"),
+                          "v": ("batch", None, "kv_heads", "head_dim")}}
+
+    def build_cross_cache(self, params, enc_out):
+        return self.cross_attn.init_cross_cache(params["cross_attn"], enc_out)
+
+    def prefill(self, params, x, enc_out, cache, *, lora=None, impl="chunked"):
+        lora = lora or {}
+        h, self_c = self.self_attn.prefill(params["self_attn"],
+                                           self.ln1(params["ln1"], x), cache["self"],
+                                           lora=lora.get("self_attn"), impl=impl)
+        x = x + h
+        x = x + self.cross_attn(params["cross_attn"], self.ln2(params["ln2"], x),
+                                kv_input=enc_out, lora=lora.get("cross_attn"))
+        x = x + self.mlp(params["mlp"], self.ln3(params["ln3"], x), lora.get("mlp"))
+        return x, {"self": self_c}
+
+    def decode_step(self, params, x, cache, cross_cache, pos, *, lora=None):
+        lora = lora or {}
+        h, self_c = self.self_attn.decode_step(params["self_attn"],
+                                               self.ln1(params["ln1"], x), cache["self"],
+                                               pos, lora=lora.get("self_attn"))
+        x = x + h
+        x = x + self.cross_attn.cross_decode_step(params["cross_attn"],
+                                                  self.ln2(params["ln2"], x), cross_cache,
+                                                  lora=lora.get("cross_attn"))
+        x = x + self.mlp(params["mlp"], self.ln3(params["ln3"], x), lora.get("mlp"))
+        return x, {"self": self_c}
+
+
+class EncDecLM(Module):
+    """Whisper-style encoder-decoder with scanned layer stacks."""
+
+    def __init__(self, *, vocab: int, d_model: int, n_enc_layers: int,
+                 n_dec_layers: int, n_heads: int, d_ff: int,
+                 max_dec_len: int = 448, enc_frames: int = 1500,
+                 remat: bool = True, dtype=jnp.float32):
+        self.vocab, self.d_model = vocab, d_model
+        self.n_enc, self.n_dec = n_enc_layers, n_dec_layers
+        self.max_dec_len, self.enc_frames = max_dec_len, enc_frames
+        self.remat = remat
+        self.dtype = dtype
+        self.enc_block = EncoderBlock(d_model, n_heads, d_ff, dtype=dtype)
+        self.dec_block = DecoderBlock(d_model, n_heads, d_ff, dtype=dtype)
+        self.embed = Embedding(vocab, d_model, dtype=dtype)
+        self.enc_ln = LayerNorm(d_model, dtype=dtype)
+        self.dec_ln = LayerNorm(d_model, dtype=dtype)
+
+    def init(self, key):
+        ke, kd, kt, kp = jax.random.split(key, 4)
+        return {
+            "encoder": self.enc_block.init_stacked(ke, self.n_enc),
+            "decoder": self.dec_block.init_stacked(kd, self.n_dec),
+            "embed": self.embed.init(kt),
+            "pos_embed": {"table": (jax.random.normal(kp, (self.max_dec_len, self.d_model)) * 0.01).astype(self.dtype)},
+            "enc_ln": self.enc_ln.init(None),
+            "dec_ln": self.dec_ln.init(None),
+        }
+
+    def axes(self):
+        return {
+            "encoder": self.enc_block.stacked_axes(),
+            "decoder": self.dec_block.stacked_axes(),
+            "embed": self.embed.axes(),
+            "pos_embed": {"table": (None, "embed")},
+            "enc_ln": self.enc_ln.axes(),
+            "dec_ln": self.dec_ln.axes(),
+        }
+
+    def lora_init(self, key, rank: int):
+        ke, kd = jax.random.split(key)
+        enc = jax.vmap(lambda k: self.enc_block.lora_init(k, rank))(jax.random.split(ke, self.n_enc))
+        dec = jax.vmap(lambda k: self.dec_block.lora_init(k, rank))(jax.random.split(kd, self.n_dec))
+        return {"encoder": enc, "decoder": dec}
+
+    def lora_axes(self):
+        def stack(ax):
+            return jax.tree_util.tree_map(
+                lambda a: ("layers",) + tuple(a or ()), ax,
+                is_leaf=lambda x: x is None or isinstance(x, tuple))
+        return {"encoder": stack(self.enc_block.lora_axes()),
+                "decoder": stack(self.dec_block.lora_axes())}
+
+    # -- encoder -------------------------------------------------------------
+    def encode(self, params, audio_embeds, *, lora=None):
+        x = audio_embeds.astype(self.dtype)
+        x = x + sinusoidal_positions(x.shape[1], self.d_model).astype(self.dtype)[None]
+        x = constrain(x, ("batch", None, "embed"))
+
+        def body(x, xs):
+            if lora is not None:
+                p, l = xs
+            else:
+                (p,) = xs
+                l = None
+            return self.enc_block(p, x, lora=l), None
+
+        if self.remat:
+            body = jax.checkpoint(body)
+        xs = (params["encoder"],) if lora is None else (params["encoder"], lora["encoder"])
+        x, _ = jax.lax.scan(body, x, xs)
+        return self.enc_ln(params["enc_ln"], x)
+
+    def _dec_embed(self, params, tokens, offset=0):
+        x = self.embed(params["embed"], tokens).astype(self.dtype)
+        s = tokens.shape[1]
+        pos_table = params["pos_embed"]["table"]
+        pos = jax.lax.dynamic_slice_in_dim(pos_table, offset, s, 0) if isinstance(offset, int) \
+            else jax.lax.dynamic_slice_in_dim(pos_table, offset, s, 0)
+        return constrain(x + pos[None], ("batch", None, "embed"))
+
+    # -- training ----------------------------------------------------------------
+    def forward(self, params, tokens, audio_embeds, *, lora=None, impl="auto",
+                return_hidden=False):
+        enc_out = self.encode(params, audio_embeds, lora=lora)
+        x = self._dec_embed(params, tokens)
+
+        def body(x, xs):
+            if lora is not None:
+                p, l = xs
+            else:
+                (p,) = xs
+                l = None
+            x = jax.lax.optimization_barrier(x)
+            return self.dec_block(p, x, enc_out, lora=l, impl=impl), None
+
+        if self.remat:
+            body = jax.checkpoint(body)
+        xs = (params["decoder"],) if lora is None else (params["decoder"], lora["decoder"])
+        x, _ = jax.lax.scan(body, x, xs)
+        if return_hidden:
+            return x
+        x = self.dec_ln(params["dec_ln"], x)
+        logits = self.embed.attend(params["embed"], x)  # tied head
+        return constrain(logits, ("batch", None, "vocab"))
+
+    def loss(self, params, lora, batch):
+        hidden = self.forward(params, batch["tokens"], batch["audio_embeds"],
+                              lora=lora, return_hidden=True)
+
+        def head_fn(xc):
+            xc = self.dec_ln(params["dec_ln"], xc)
+            return constrain(self.embed.attend(params["embed"], xc),
+                             ("batch", None, "vocab"))
+
+        return chunked_cross_entropy(hidden, head_fn, batch["labels"])
+
+    # -- serving -----------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=None) -> PyTree:
+        dtype = dtype or self.dtype
+        one = self.dec_block.self_attn.init_cache(batch, max_len, dtype)
+        self_c = jax.tree_util.tree_map(
+            lambda leaf: jnp.broadcast_to(leaf, (self.n_dec,) + leaf.shape).copy(), one)
+        hd = self.dec_block.cross_attn.head_dim
+        nk = self.dec_block.cross_attn.n_kv
+        cross = {"k": jnp.zeros((self.n_dec, batch, self.enc_frames, nk, hd), dtype),
+                 "v": jnp.zeros((self.n_dec, batch, self.enc_frames, nk, hd), dtype)}
+        return {"self": self_c, "cross": cross}
+
+    def cache_axes(self):
+        ax = self.dec_block.cache_axes()
+        stack = lambda t: jax.tree_util.tree_map(
+            lambda a: ("layers",) + tuple(a or ()), t,
+            is_leaf=lambda x: x is None or isinstance(x, tuple))
+        return {"self": stack({"self": ax["self"]})["self"], "cross": stack(ax["cross"])}
+
+    def prefill(self, params, lora, batch, cache, *, impl="chunked"):
+        enc_out = self.encode(params, batch["audio_embeds"], lora=lora)
+        x = self._dec_embed(params, batch["tokens"])
+
+        def body(carry, xs):
+            x = carry
+            if lora is not None:
+                p, l, c = xs
+            else:
+                p, c = xs
+                l = None
+            x, new_c = self.dec_block.prefill(p, x, enc_out, {"self": c}, lora=l, impl=impl)
+            cross = self.dec_block.build_cross_cache(p, enc_out)
+            return x, (new_c["self"], cross)
+
+        xs = ((params["decoder"], cache["self"]) if lora is None
+              else (params["decoder"], lora["decoder"], cache["self"]))
+        x, (self_c, cross_c) = jax.lax.scan(body, x, xs)
+        x = self.dec_ln(params["dec_ln"], x[:, -1:, :])
+        logits = self.embed.attend(params["embed"], x)[:, 0]
+        return logits, {"self": self_c, "cross": cross_c}
+
+    def decode_step(self, params, lora, tokens, cache, pos):
+        x = self._dec_embed(params, tokens, offset=pos)
+
+        def body(carry, xs):
+            x = carry
+            if lora is not None:
+                p, l, c, cc = xs
+            else:
+                p, c, cc = xs
+                l = None
+            x, new_c = self.dec_block.decode_step(p, x, {"self": c}, cc, pos, lora=l)
+            return x, new_c["self"]
+
+        xs = ((params["decoder"], cache["self"], cache["cross"]) if lora is None
+              else (params["decoder"], lora["decoder"], cache["self"], cache["cross"]))
+        x, self_c = jax.lax.scan(body, x, xs)
+        x = self.dec_ln(params["dec_ln"], x)
+        logits = self.embed.attend(params["embed"], x)[:, 0]
+        return logits, {"self": self_c, "cross": cache["cross"]}

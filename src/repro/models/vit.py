@@ -1,0 +1,89 @@
+"""Vision Transformer backbone (the paper's own model family, ViT-B/32).
+
+Patchification is external: the model consumes pre-extracted patch
+vectors (B, n_patches, patch_dim) — for the paper-scale experiments we
+use synthetic tasks, for which patch vectors are generated directly.
+Per-task classifier heads live in the federated layer (repro.fed), so
+MaTU task vectors cover exactly the shared LoRA parameters, as in the
+paper.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.encdec import EncoderBlock
+from repro.nn.module import Dense, LayerNorm, Module
+from repro.nn.sharding import constrain
+
+PyTree = Any
+
+
+class ViT(Module):
+    def __init__(self, *, patch_dim: int, n_patches: int, d_model: int,
+                 n_layers: int, n_heads: int, d_ff: int, remat: bool = False,
+                 dtype=jnp.float32):
+        self.patch_dim, self.n_patches = patch_dim, n_patches
+        self.d_model, self.n_layers = d_model, n_layers
+        self.remat = remat
+        self.dtype = dtype
+        self.patch_embed = Dense(patch_dim, d_model, bias=True, axes=(None, "embed"), dtype=dtype)
+        self.block = EncoderBlock(d_model, n_heads, d_ff, dtype=dtype)
+        self.final_ln = LayerNorm(d_model, dtype=dtype)
+
+    def init(self, key):
+        kp, kb, kc, kpos = jax.random.split(key, 4)
+        return {
+            "patch_embed": self.patch_embed.init(kp),
+            "cls": (jax.random.normal(kc, (1, 1, self.d_model)) * 0.02).astype(self.dtype),
+            "pos": (jax.random.normal(kpos, (1, self.n_patches + 1, self.d_model)) * 0.02).astype(self.dtype),
+            "blocks": self.block.init_stacked(kb, self.n_layers),
+            "final_ln": self.final_ln.init(None),
+        }
+
+    def axes(self):
+        return {
+            "patch_embed": self.patch_embed.axes(),
+            "cls": (None, None, "embed"),
+            "pos": (None, None, "embed"),
+            "blocks": self.block.stacked_axes(),
+            "final_ln": self.final_ln.axes(),
+        }
+
+    def lora_init(self, key, rank: int):
+        ks = jax.random.split(key, self.n_layers)
+        return {"blocks": jax.vmap(lambda k: self.block.lora_init(k, rank))(ks)}
+
+    def lora_axes(self):
+        return {"blocks": jax.tree_util.tree_map(
+            lambda a: ("layers",) + tuple(a or ()), self.block.lora_axes(),
+            is_leaf=lambda x: x is None or isinstance(x, tuple))}
+
+    def features(self, params, patches, *, lora=None):
+        """patches (B, P, patch_dim) -> CLS features (B, d_model)."""
+        b = patches.shape[0]
+        x = self.patch_embed(params["patch_embed"], patches.astype(self.dtype))
+        cls = jnp.broadcast_to(params["cls"], (b, 1, self.d_model))
+        x = jnp.concatenate([cls, x], axis=1) + params["pos"]
+        x = constrain(x, ("batch", None, "embed"))
+
+        def body(x, xs):
+            if lora is not None:
+                p, l = xs
+            else:
+                (p,) = xs
+                l = None
+            return self.block(p, x, lora=l), None
+
+        if self.remat:
+            body = jax.checkpoint(body)
+        xs = (params["blocks"],) if lora is None else (params["blocks"], lora["blocks"])
+        x, _ = jax.lax.scan(body, x, xs)
+        x = self.final_ln(params["final_ln"], x)
+        return x[:, 0]
+
+    def __call__(self, params, patches, *, lora=None):
+        return self.features(params, patches, lora=lora)

@@ -1,0 +1,278 @@
+"""Grouped-query attention with RoPE / M-RoPE, sliding windows and caches.
+
+One module serves the dense (qwen2/2.5, codeqwen), VLM (qwen2-vl),
+encoder-decoder (whisper) and hybrid (hymba attention branch) families.
+
+Three execution paths:
+
+* ``__call__``      full-sequence (training / short prefill); `impl` picks
+                    between materialised scores ("full") and a
+                    lax.scan over query chunks with bounded memory
+                    ("chunked") — the 32k prefill path.
+* ``prefill``       full-sequence + writes the KV cache.
+* ``decode_step``   single-token with KV cache; ring buffer when a
+                    sliding window is configured (long_500k path).
+
+All softmax math is fp32 regardless of activation dtype.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Dense, Module
+from repro.nn.rope import apply_rope
+from repro.nn.sharding import constrain, current_mesh
+
+PyTree = Any
+NEG_INF = -1e30
+
+
+def _split_heads(x, n_heads, head_dim):
+    return x.reshape(x.shape[:-1] + (n_heads, head_dim))
+
+
+class Attention(Module):
+    def __init__(
+        self,
+        d_model: int,
+        n_heads: int,
+        n_kv_heads: int,
+        *,
+        head_dim: Optional[int] = None,
+        qkv_bias: bool = False,
+        out_bias: bool = False,
+        rope: bool = True,
+        rope_base: float = 10000.0,
+        mrope_sections: Optional[Tuple[int, ...]] = None,
+        window: Optional[int] = None,
+        causal: bool = True,
+        cross: bool = False,
+        q_chunk: int = 512,
+        dtype=jnp.float32,
+    ):
+        assert n_heads % n_kv_heads == 0
+        self.d_model = d_model
+        self.n_heads = n_heads
+        self.n_kv = n_kv_heads
+        self.head_dim = head_dim or d_model // n_heads
+        self.group = n_heads // n_kv_heads
+        self.rope = rope and not cross
+        self.rope_base = rope_base
+        self.mrope_sections = mrope_sections
+        self.window = window
+        self.causal = causal and not cross
+        self.cross = cross
+        self.q_chunk = q_chunk
+        self.dtype = dtype
+        hd = self.head_dim
+        self.wq = Dense(d_model, n_heads * hd, bias=qkv_bias, axes=("embed", "heads"), dtype=dtype)
+        self.wk = Dense(d_model, n_kv_heads * hd, bias=qkv_bias, axes=("embed", "kv_heads"), dtype=dtype)
+        self.wv = Dense(d_model, n_kv_heads * hd, bias=qkv_bias, axes=("embed", "kv_heads"), dtype=dtype)
+        self.wo = Dense(n_heads * hd, d_model, bias=out_bias, axes=("heads", "embed"), dtype=dtype,
+                        scale=1.0 / math.sqrt(n_heads * hd))
+
+    # -- params ----------------------------------------------------------
+    def init(self, key):
+        kq, kk, kv, ko = jax.random.split(key, 4)
+        return {"wq": self.wq.init(kq), "wk": self.wk.init(kk),
+                "wv": self.wv.init(kv), "wo": self.wo.init(ko)}
+
+    def axes(self):
+        return {"wq": self.wq.axes(), "wk": self.wk.axes(),
+                "wv": self.wv.axes(), "wo": self.wo.axes()}
+
+    def lora_init(self, key, rank: int):
+        kq, ko = jax.random.split(key, 2)
+        return {"wq": self.wq.lora_init(kq, rank), "wo": self.wo.lora_init(ko, rank)}
+
+    def lora_axes(self):
+        return {"wq": self.wq.lora_axes(), "wo": self.wo.lora_axes()}
+
+    # -- projections -----------------------------------------------------
+    def _qkv(self, params, x, kv_input, positions, lora):
+        lora = lora or {}
+        q = _split_heads(self.wq(params["wq"], x, lora.get("wq")), self.n_heads, self.head_dim)
+        k = _split_heads(self.wk(params["wk"], kv_input), self.n_kv, self.head_dim)
+        v = _split_heads(self.wv(params["wv"], kv_input), self.n_kv, self.head_dim)
+        q = constrain(q, ("batch", None, "heads", None))
+        if self.rope and positions is not None:
+            q = apply_rope(q, positions, base=self.rope_base, mrope_sections=self.mrope_sections)
+            k = apply_rope(k, positions, base=self.rope_base, mrope_sections=self.mrope_sections)
+        return q, k, v
+
+    def _out(self, params, ctx, lora):
+        lora = lora or {}
+        b, s = ctx.shape[0], ctx.shape[1]
+        y = self.wo(params["wo"], ctx.reshape(b, s, self.n_heads * self.head_dim), lora.get("wo"))
+        # reduce-scatter into the sequence-parallel residual layout
+        # instead of a full all-reduce (PERF-1, EXPERIMENTS.md §Perf)
+        return constrain(y, ("batch", "act_seq", "embed"))
+
+    # -- mask ------------------------------------------------------------
+    def _mask(self, q_pos, k_pos):
+        """q_pos (Q,), k_pos (K,) -> bool (Q, K); True = attend."""
+        ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+        if self.causal:
+            ok &= k_pos[None, :] <= q_pos[:, None]
+        if self.window is not None:
+            ok &= (q_pos[:, None] - k_pos[None, :]) < self.window
+        return ok
+
+    def _sdpa(self, q, k, v, mask):
+        """q (B,Q,H,D), k/v (B,S,K,D), mask (Q,S) or (B,1,1,Q,S)."""
+        b, qlen = q.shape[0], q.shape[1]
+        qg = q.reshape(b, qlen, self.n_kv, self.group, self.head_dim)
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+        scores *= 1.0 / math.sqrt(self.head_dim)
+        if mask is not None:
+            if mask.ndim == 2:
+                mask = mask[None, None, None]
+            scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        ctx = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+        return ctx.reshape(b, qlen, self.n_heads, self.head_dim)
+
+    # -- full-sequence ---------------------------------------------------
+    def __call__(self, params, x, *, positions=None, lora=None,
+                 kv_input=None, impl: str = "full",
+                 q_chunk: Optional[int] = None) -> jax.Array:
+        """x (B,S,d). For cross-attn pass kv_input (B,S_kv,d).
+
+        impl: "full" (materialised scores), "chunked" (scan over query
+        chunks), or "auto" (full only when S fits one chunk)."""
+        q_chunk = q_chunk or self.q_chunk
+        kv_input = x if kv_input is None else kv_input
+        q, k, v = self._qkv(params, x, kv_input, positions, lora)
+        s_q, s_k = q.shape[1], k.shape[1]
+        rope_pos = positions if positions is not None and positions.ndim == 2 else None
+        q_pos = rope_pos[0] if rope_pos is not None else jnp.arange(s_q)
+        k_pos = q_pos if kv_input is x else jnp.arange(s_k)
+        use_full = (impl == "full") or s_q <= q_chunk
+        if impl == "auto" and s_q > q_chunk:
+            use_full = False
+        if use_full:
+            mask = self._mask(q_pos, k_pos) if (self.causal or self.window) else None
+            ctx = self._sdpa(q, k, v, mask)
+        else:
+            ctx = self._chunked(q, k, v, q_pos, k_pos, q_chunk)
+        return self._out(params, ctx, lora)
+
+    def _seq_parallel(self) -> bool:
+        """When the head count does not divide the model axis, shard the
+        query-chunk (sequence) dim over `model` instead — otherwise XLA
+        replicates heads and score blocks blow up 16x (DESIGN.md §5)."""
+        mesh = current_mesh()
+        if mesh is None or "model" not in mesh.shape:
+            return False
+        return self.n_heads % mesh.shape["model"] != 0
+
+    def _chunked(self, q, k, v, q_pos, k_pos, q_chunk):
+        """lax.scan over query chunks; O(chunk * S) score memory.
+        The chunk body is rematerialised (probs are recomputed in the
+        backward pass instead of being saved per chunk)."""
+        b, s_q = q.shape[0], q.shape[1]
+        n_chunks = -(-s_q // q_chunk)
+        pad = n_chunks * q_chunk - s_q
+        if pad:
+            q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            q_pos = jnp.pad(q_pos, (0, pad), constant_values=-1)
+        qs = q.reshape(b, n_chunks, q_chunk, self.n_heads, self.head_dim).transpose(1, 0, 2, 3, 4)
+        seq_par = self._seq_parallel()
+        # PERF-4: pin the stacked chunk layout — without this XLA keeps
+        # flip-flopping between seq- and (partial) head-sharding across
+        # the scan boundary, causing involuntary full rematerializations
+        # (observed on the 20/25/40-head archs).
+        if seq_par:
+            qs = constrain(qs, (None, "batch", "act_seq", None, None))
+        else:
+            qs = constrain(qs, (None, "batch", None, "heads", None))
+        qps = q_pos.reshape(n_chunks, q_chunk)
+
+        @jax.checkpoint
+        def body(carry, inp):
+            qc, qp = inp
+            if seq_par:
+                qc = constrain(qc, ("batch", "act_seq", None, None))
+            mask = self._mask(qp, k_pos) & (qp >= 0)[:, None]
+            out = self._sdpa(qc, k, v, mask)
+            if seq_par:
+                out = constrain(out, ("batch", "act_seq", None, None))
+            return carry, out
+
+        _, ctx = jax.lax.scan(body, None, (qs, qps))
+        ctx = ctx.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * q_chunk, self.n_heads, self.head_dim)
+        return ctx[:, :s_q]
+
+    # -- serving ---------------------------------------------------------
+    def cache_len(self, max_len: int) -> int:
+        return min(max_len, self.window) if self.window is not None else max_len
+
+    def init_cache(self, batch: int, max_len: int, dtype=None) -> PyTree:
+        dtype = dtype or self.dtype
+        s = self.cache_len(max_len)
+        z = jnp.zeros((batch, s, self.n_kv, self.head_dim), dtype)
+        return {"k": z, "v": z, "kpos": jnp.full((s,), -1, jnp.int32)}
+
+    def prefill(self, params, x, cache, *, positions=None, lora=None,
+                impl: str = "chunked", q_chunk: Optional[int] = None):
+        """Run full-seq attention AND populate the cache (suffix for SWA)."""
+        y = self(params, x, positions=positions, lora=lora, impl=impl, q_chunk=q_chunk)
+        _, k, v = self._qkv(params, x, x, positions, lora)
+        s_cache = cache["k"].shape[1]
+        s = k.shape[1]
+        if s >= s_cache:
+            # keep the trailing window, slot = pos % window
+            start = s - s_cache
+            kpos = jnp.arange(start, s)
+            slots = kpos % s_cache
+            cache = {"k": cache["k"].at[:, slots].set(k[:, start:]),
+                     "v": cache["v"].at[:, slots].set(v[:, start:]),
+                     "kpos": cache["kpos"].at[slots].set(kpos)}
+        else:
+            cache = {"k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1),
+                     "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1),
+                     "kpos": cache["kpos"].at[:s].set(jnp.arange(s))}
+        return y, cache
+
+    def decode_step(self, params, x, cache, pos, *, lora=None):
+        """x (B,1,d); pos scalar int32 = position of this token."""
+        b = x.shape[0]
+        if self.mrope_sections is not None:
+            positions = jnp.broadcast_to(pos, (b, 1, 3)).astype(jnp.int32)
+        else:
+            positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+        q, k, v = self._qkv(params, x, x, positions, lora)
+        s_cache = cache["k"].shape[1]
+        slot = (pos % s_cache).astype(jnp.int32)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1)
+        kpos = jax.lax.dynamic_update_slice_in_dim(cache["kpos"], jnp.broadcast_to(pos, (1,)).astype(jnp.int32), slot, 0)
+        valid = (kpos >= 0) & (kpos <= pos)
+        if self.window is not None:
+            valid &= (pos - kpos) < self.window
+        ctx = self._sdpa(q, ck, cv, valid[None, :].astype(bool))
+        y = self._out(params, ctx, lora)
+        return y, {"k": ck, "v": cv, "kpos": kpos}
+
+    # -- cross-attention serving (whisper) --------------------------------
+    def init_cross_cache(self, params, enc_out, *, lora=None):
+        """Project encoder output to K/V once; reused every decode step."""
+        k = _split_heads(self.wk(params["wk"], enc_out), self.n_kv, self.head_dim)
+        v = _split_heads(self.wv(params["wv"], enc_out), self.n_kv, self.head_dim)
+        return {"k": k, "v": v}
+
+    def cross_decode_step(self, params, x, cross_cache, *, lora=None):
+        lora = lora or {}
+        q = _split_heads(self.wq(params["wq"], x, lora.get("wq")), self.n_heads, self.head_dim)
+        ctx = self._sdpa(q, cross_cache["k"], cross_cache["v"], None)
+        return self._out(params, ctx, lora)
+
+    def cache_axes(self):
+        return {"k": ("batch", "cache_seq", "kv_heads", "head_dim"),
+                "v": ("batch", "cache_seq", "kv_heads", "head_dim"),
+                "kpos": ("cache_seq",)}

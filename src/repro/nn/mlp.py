@@ -1,0 +1,72 @@
+"""Feed-forward blocks: SwiGLU (llama/qwen family) and GELU (whisper/ViT)."""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Dense, Module
+from repro.nn.sharding import constrain
+
+PyTree = Any
+
+
+class SwiGLU(Module):
+    def __init__(self, d_model: int, d_ff: int, *, dtype=jnp.float32):
+        self.d_model, self.d_ff, self.dtype = d_model, d_ff, dtype
+        self.gate = Dense(d_model, d_ff, axes=("embed", "mlp"), dtype=dtype)
+        self.up = Dense(d_model, d_ff, axes=("embed", "mlp"), dtype=dtype)
+        self.down = Dense(d_ff, d_model, axes=("mlp", "embed"), dtype=dtype)
+
+    def init(self, key):
+        kg, ku, kd = jax.random.split(key, 3)
+        return {"gate": self.gate.init(kg), "up": self.up.init(ku), "down": self.down.init(kd)}
+
+    def axes(self):
+        return {"gate": self.gate.axes(), "up": self.up.axes(), "down": self.down.axes()}
+
+    def lora_init(self, key, rank: int):
+        kd, = jax.random.split(key, 1)
+        return {"down": self.down.lora_init(kd, rank)}
+
+    def lora_axes(self):
+        return {"down": self.down.lora_axes()}
+
+    def __call__(self, params, x, lora: Optional[PyTree] = None):
+        lora = lora or {}
+        h = jax.nn.silu(self.gate(params["gate"], x)) * self.up(params["up"], x)
+        h = constrain(h, ("batch", None, "mlp"))
+        # reduce-scatter into the sequence-parallel residual (PERF-1)
+        return constrain(self.down(params["down"], h, lora.get("down")),
+                         ("batch", "act_seq", "embed"))
+
+
+class GeluMLP(Module):
+    def __init__(self, d_model: int, d_ff: int, *, bias: bool = True, dtype=jnp.float32):
+        self.d_model, self.d_ff, self.dtype = d_model, d_ff, dtype
+        self.up = Dense(d_model, d_ff, bias=bias, axes=("embed", "mlp"), dtype=dtype)
+        self.down = Dense(d_ff, d_model, bias=bias, axes=("mlp", "embed"), dtype=dtype)
+
+    def init(self, key):
+        ku, kd = jax.random.split(key, 2)
+        return {"up": self.up.init(ku), "down": self.down.init(kd)}
+
+    def axes(self):
+        return {"up": self.up.axes(), "down": self.down.axes()}
+
+    def lora_init(self, key, rank: int):
+        kd, = jax.random.split(key, 1)
+        return {"down": self.down.lora_init(kd, rank)}
+
+    def lora_axes(self):
+        return {"down": self.down.lora_axes()}
+
+    def __call__(self, params, x, lora: Optional[PyTree] = None):
+        lora = lora or {}
+        h = jax.nn.gelu(self.up(params["up"], x), approximate=True)
+        h = constrain(h, ("batch", None, "mlp"))
+        # reduce-scatter into the sequence-parallel residual (PERF-1)
+        return constrain(self.down(params["down"], h, lora.get("down")),
+                         ("batch", "act_seq", "embed"))

@@ -1,0 +1,54 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_angles(positions: jax.Array, head_dim: int, base: float) -> jax.Array:
+    """positions (..., S) -> angles (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, base: float = 10000.0,
+               mrope_sections: Optional[Sequence[int]] = None) -> jax.Array:
+    """Apply rotary embedding.
+
+    x: (B, S, H, D) with D even, rotate-half (llama) convention.
+    positions: (B, S) int32, or (B, S, 3) for M-RoPE (t/h/w coords).
+
+    M-RoPE (Qwen2-VL): the D/2 frequency slots are partitioned into
+    sections; each section takes its phase from the corresponding
+    position coordinate (temporal / height / width).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    if mrope_sections is None:
+        ang = rope_angles(positions, d, base)  # (B,S,half)
+    else:
+        assert positions.ndim == 3 and positions.shape[-1] == len(mrope_sections)
+        assert sum(mrope_sections) == half, (mrope_sections, half)
+        per = []
+        offset = 0
+        freqs = 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+        for i, sec in enumerate(mrope_sections):
+            f = freqs[offset : offset + sec]
+            per.append(positions[..., i].astype(jnp.float32)[..., None] * f)
+            offset += sec
+        ang = jnp.concatenate(per, axis=-1)  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]  # (B,S,1,half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1).astype(dt)
+
+
+def text_mrope_positions(positions: jax.Array) -> jax.Array:
+    """Lift (B,S) text positions to (B,S,3) M-RoPE coords (all equal)."""
+    return jnp.stack([positions, positions, positions], axis=-1)

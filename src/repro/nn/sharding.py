@@ -1,0 +1,176 @@
+"""Logical-axis sharding (MaxText-style).
+
+Every parameter in the model zoo is annotated with a tuple of *logical*
+axis names (e.g. ``("embed", "mlp")``).  A set of *rules* maps each
+logical axis to zero-or-one mesh axes; :func:`logical_to_sharding`
+turns an axes-pytree into a NamedSharding pytree for pjit
+in_shardings/out_shardings, and :func:`constrain` applies
+``with_sharding_constraint`` to activations inside the traced function.
+
+Outside a mesh context (CPU unit tests, smoke tests) every call is a
+no-op, so model code can be written once.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Mapping, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+LogicalAxes = Optional[Tuple[Optional[str], ...]]
+
+# Default rules used by the production launcher.  ``None`` = replicate.
+# "batch"-like axes shard over the data axes; tensor axes over "model".
+DEFAULT_RULES: Tuple[Tuple[str, Any], ...] = (
+    ("batch", ("pod", "data")),
+    ("fed_clients", ("pod", "data")),
+    ("act_seq", "model"),      # sequence-parallel residual stream
+    # KV caches shard their sequence dim over whatever axes the batch
+    # dim left unused — distributed flash-decode (softmax partials are
+    # psum-combined by GSPMD).  For batch-sharded decode that is
+    # `model`; for batch-1 long-context it is both axes.
+    ("cache_seq", ("data", "model")),
+    ("embed", None),
+    ("heads", "model"),
+    ("kv_heads", None),
+    ("head_dim", None),
+    ("mlp", "model"),
+    ("moe_mlp", "model"),
+    ("experts", "model"),
+    ("expert_embed", "data"),   # ZeRO-3 rest sharding for expert weights
+    ("vocab", "model"),
+    ("state", None),
+    ("conv", None),
+    ("lora", None),
+    ("layers", None),
+    ("taskvec", ("pod", "data", "model")),  # flattened-d MaTU server math
+    ("tasks", None),
+)
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Mapping[str, Any] = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+class mesh_context:
+    """Context manager installing (mesh, rules) for logical sharding."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[Mapping[str, Any]] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+        self._prev = None
+
+    def __enter__(self):
+        self._prev = (_CTX.mesh, _CTX.rules)
+        _CTX.mesh, _CTX.rules = self.mesh, self.rules
+        return self
+
+    def __exit__(self, *exc):
+        _CTX.mesh, _CTX.rules = self._prev
+        return False
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _axis_size(mesh: Mesh, mesh_axes) -> int:
+    if mesh_axes is None:
+        return 1
+    if isinstance(mesh_axes, str):
+        return mesh.shape[mesh_axes]
+    return int(np.prod([mesh.shape[a] for a in mesh_axes]))
+
+
+def resolve_spec(
+    logical: LogicalAxes,
+    shape: Optional[Sequence[int]] = None,
+    *,
+    mesh: Optional[Mesh] = None,
+    rules: Optional[Mapping[str, Any]] = None,
+) -> P:
+    """Map logical axis names to a PartitionSpec under the active rules.
+
+    When ``shape`` is given, a mesh mapping that does not divide the
+    dimension evenly is dropped (replicated) — we prefer replication
+    over GSPMD padding for parameters, and record the decision at the
+    call site that cares (the dry-run prints effective specs).
+    """
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    if logical is None or mesh is None:
+        return P()
+    spec, used = [], set()
+    for i, name in enumerate(logical):
+        mesh_axes = rules.get(name) if name is not None else None
+        if mesh_axes is None:
+            spec.append(None)
+            continue
+        # a mesh axis may be consumed by only one tensor dim
+        if isinstance(mesh_axes, str):
+            candidates = (mesh_axes,)
+        else:
+            candidates = tuple(a for a in mesh_axes)
+        candidates = tuple(a for a in candidates if a in mesh.shape and a not in used)
+        if not candidates:
+            spec.append(None)
+            continue
+        size = int(np.prod([mesh.shape[a] for a in candidates]))
+        if shape is not None and shape[i] % size != 0:
+            # try a prefix of the candidate axes that divides
+            ok = None
+            for j in range(len(candidates) - 1, 0, -1):
+                sub = candidates[:j]
+                s = int(np.prod([mesh.shape[a] for a in sub]))
+                if shape[i] % s == 0:
+                    ok = sub
+                    break
+            if ok is None:
+                spec.append(None)
+                continue
+            candidates = ok
+        used.update(candidates)
+        spec.append(candidates[0] if len(candidates) == 1 else tuple(candidates))
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def logical_to_sharding(axes_tree: PyTree, shapes_tree: Optional[PyTree] = None,
+                        *, mesh: Optional[Mesh] = None,
+                        rules: Optional[Mapping[str, Any]] = None) -> PyTree:
+    """Build a NamedSharding pytree from a logical-axes pytree."""
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        raise ValueError("logical_to_sharding requires an active mesh_context or explicit mesh")
+
+    def one(axes, shape=None):
+        return NamedSharding(mesh, resolve_spec(axes, shape, mesh=mesh, rules=rules))
+
+    if shapes_tree is None:
+        return jax.tree_util.tree_map(one, axes_tree, is_leaf=lambda x: x is None or isinstance(x, tuple))
+    return jax.tree_util.tree_map(
+        lambda a, s: one(a, s.shape if hasattr(s, "shape") else s),
+        axes_tree, shapes_tree,
+        is_leaf=lambda x: x is None or isinstance(x, tuple),
+    )
+
+
+def constrain(x: jax.Array, logical: LogicalAxes) -> jax.Array:
+    """with_sharding_constraint under the active mesh; no-op otherwise."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = resolve_spec(logical, x.shape, mesh=mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,510 @@
+"""Recurrent sequence mixers: xLSTM (mLSTM + sLSTM) and Mamba.
+
+TPU adaptation notes (DESIGN.md §3):
+
+* mLSTM runs in the *chunkwise-parallel* form — within a chunk the
+  update is expressed as masked matmuls (MXU-shaped), across chunks a
+  ``lax.scan`` carries the (C, n, m) matrix-memory state.  A pure
+  per-step recurrence (``mlstm_recurrent``) is kept as the numerical
+  oracle and as the decode step.  Both are fully stabilised in log
+  space (running max ``m``).
+* sLSTM has a true hidden-to-gate recurrence, so it is inherently
+  sequential: ``lax.scan`` over time.
+* Mamba (hymba's SSM branch) uses a diagonal selective state-space
+  recurrence, scanned over time for training and a single fused update
+  for decoding.
+
+All recurrences are O(S) in sequence length — these are the
+architectures that run the ``long_500k`` shape natively.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Dense, Module, RMSNorm
+from repro.nn.sharding import constrain
+
+PyTree = Any
+
+
+def _logsigmoid(x):
+    return -jax.nn.softplus(-x)
+
+
+def _headwise_rmsnorm(x, scale, eps=1e-6):
+    """x (..., H, D) normalised per head (GroupNorm as in xLSTM)."""
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM core math
+# ---------------------------------------------------------------------------
+
+def mlstm_recurrent_step(state, q, k, v, i_pre, f_pre):
+    """One stabilised mLSTM step.
+
+    state: C (B,H,Dk,Dv), n (B,H,Dk), m (B,H)
+    q,k (B,H,Dk), v (B,H,Dv), i_pre/f_pre (B,H) pre-activations.
+    """
+    C, n, m = state
+    log_f = _logsigmoid(f_pre.astype(jnp.float32))
+    i32 = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(log_f + m, i32)
+    fp = jnp.exp(log_f + m - m_new)
+    ip = jnp.exp(i32 - m_new)
+    C = fp[..., None, None] * C + ip[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n = fp[..., None] * n + ip[..., None] * k
+    qn = jnp.einsum("bhd,bhd->bh", q, n)
+    num = jnp.einsum("bhd,bhdv->bhv", q, C)
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))[..., None]
+    h = num / denom
+    return (C, n, m_new), h.astype(v.dtype)
+
+
+def mlstm_chunkwise(q, k, v, i_pre, f_pre, state, *, chunk: int = 256):
+    """Chunkwise-parallel stabilised mLSTM.
+
+    q,k (B,H,S,Dk) — q pre-scaled by Dk**-0.5; v (B,H,S,Dv);
+    i_pre,f_pre (B,H,S). Returns (h (B,H,S,Dv), final_state).
+    """
+    b, hh, s, dk = q.shape
+    dv = v.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        zq = ((0, 0), (0, 0), (0, pad), (0, 0))
+        q, k, v = jnp.pad(q, zq), jnp.pad(k, zq), jnp.pad(v, zq)
+        # padded steps: forget-gate pre = +inf would keep state; use
+        # f_pre=+40 (keep) and i_pre=-inf (inject nothing).
+        i_pre = jnp.pad(i_pre, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+        f_pre = jnp.pad(f_pre, ((0, 0), (0, 0), (0, pad)), constant_values=40.0)
+
+    def to_chunks(x):
+        return x.reshape(x.shape[:2] + (nc, chunk) + x.shape[3:]).transpose(2, 0, 1, 3, *range(4, x.ndim + 1))
+
+    qs, ks, vs = to_chunks(q), to_chunks(k), to_chunks(v)
+    is_, fs = to_chunks(i_pre), to_chunks(f_pre)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(carry, inp):
+        C, n, m = carry
+        qc, kc, vc, ic, fc = inp  # (B,H,L,*), (B,H,L)
+        ic = ic.astype(jnp.float32)
+        log_f = _logsigmoid(fc.astype(jnp.float32))
+        bcum = jnp.cumsum(log_f, axis=-1)                       # (B,H,L)
+        c = ic - bcum
+        cmax = jax.lax.cummax(c, axis=2)
+        m_t = bcum + jnp.maximum(m[..., None], cmax)            # (B,H,L)
+
+        scale_inter = jnp.exp(bcum + m[..., None] - m_t)        # (B,H,L)
+        h_inter = jnp.einsum("bhld,bhdv->bhlv", qc, C) * scale_inter[..., None]
+        qn_inter = jnp.einsum("bhld,bhd->bhl", qc, n) * scale_inter
+
+        d_log = bcum[..., :, None] - bcum[..., None, :] + ic[..., None, :]
+        d_mat = jnp.where(causal, jnp.exp(d_log - m_t[..., None]), 0.0)  # (B,H,L,L)
+        scores = jnp.einsum("bhld,bhsd->bhls", qc, kc).astype(jnp.float32)
+        w = d_mat * scores
+        h_intra = jnp.einsum("bhls,bhsv->bhlv", w.astype(vc.dtype), vc)
+        qn_intra = jnp.sum(w, axis=-1)
+
+        qn = qn_inter + qn_intra
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_t))[..., None]
+        h = (h_inter.astype(jnp.float32) + h_intra.astype(jnp.float32)) / denom
+
+        total = bcum[..., -1]
+        m_next = jnp.maximum(m + total, total + jnp.max(c, axis=-1))
+        wgt = jnp.exp(total[..., None] - bcum + ic - m_next[..., None])  # (B,H,L)
+        C = (jnp.exp(m + total - m_next)[..., None, None] * C
+             + jnp.einsum("bhs,bhsd,bhsv->bhdv", wgt, kc, vc))
+        n = (jnp.exp(m + total - m_next)[..., None] * n
+             + jnp.einsum("bhs,bhsd->bhd", wgt, kc))
+        return (C, n, m_next), h.astype(v.dtype)
+
+    final, hs = jax.lax.scan(body, state, (qs, ks, vs, is_, fs))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(b, hh, nc * chunk, dv)
+    return h[:, :, :s], final
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (shared by mLSTM / mamba branches)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w, *, state=None):
+    """x (B,S,D), w (K,D) depthwise. Returns (y, new_state (B,K-1,D))."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = _depthwise(xp, w)
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return y, new_state
+
+
+def _depthwise(xp, w):
+    """Simple unrolled depthwise causal conv: xp (B, S+K-1, D), w (K, D)."""
+    k = w.shape[0]
+    s_out = xp.shape[1] - (k - 1)
+    y = jnp.zeros((xp.shape[0], s_out, xp.shape[2]), xp.dtype)
+    for j in range(k):
+        y = y + xp[:, j : j + s_out] * w[j]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+class MLSTMBlock(Module):
+    """Pre-LN mLSTM block: up-proj (u, z gate) -> conv -> q,k,v -> cell ->
+    headwise norm -> silu(z) gate -> down-proj. proj_factor=2."""
+
+    def __init__(self, d_model: int, n_heads: int, *, proj_factor: int = 2,
+                 qk_factor: int = 4, conv_kernel: int = 4, chunk: int = 256,
+                 dtype=jnp.float32):
+        self.d_model, self.n_heads = d_model, n_heads
+        self.d_inner = d_model * proj_factor
+        self.qk_dim = self.d_inner // qk_factor
+        self.dk = self.qk_dim // n_heads
+        self.dv = self.d_inner // n_heads
+        self.conv_kernel = conv_kernel
+        self.chunk = chunk
+        self.dtype = dtype
+        self.norm = RMSNorm(d_model, dtype=dtype)
+        self.up = Dense(d_model, 2 * self.d_inner, axes=("embed", "mlp"), dtype=dtype)
+        self.wq = Dense(self.d_inner, self.qk_dim, axes=("mlp", "heads"), dtype=dtype)
+        self.wk = Dense(self.d_inner, self.qk_dim, axes=("mlp", "heads"), dtype=dtype)
+        self.wif = Dense(self.d_inner, 2 * n_heads, axes=("mlp", None), dtype=dtype)
+        self.down = Dense(self.d_inner, d_model, axes=("mlp", "embed"), dtype=dtype,
+                          scale=1.0 / math.sqrt(self.d_inner))
+
+    def init(self, key):
+        ks = jax.random.split(key, 6)
+        return {
+            "norm": self.norm.init(None),
+            "up": self.up.init(ks[0]),
+            "conv": {"w": (jax.random.normal(ks[1], (self.conv_kernel, self.d_inner)) * 0.1).astype(self.dtype)},
+            "wq": self.wq.init(ks[2]), "wk": self.wk.init(ks[3]),
+            "wif": self.wif.init(ks[4]),
+            "hnorm": {"scale": jnp.ones((self.n_heads, self.dv), self.dtype)},
+            "down": self.down.init(ks[5]),
+        }
+
+    def axes(self):
+        return {
+            "norm": self.norm.axes(),
+            "up": self.up.axes(),
+            "conv": {"w": ("conv", "mlp")},
+            "wq": self.wq.axes(), "wk": self.wk.axes(),
+            "wif": self.wif.axes(),
+            "hnorm": {"scale": (None, None)},
+            "down": self.down.axes(),
+        }
+
+    def lora_init(self, key, rank: int):
+        ku, kd = jax.random.split(key, 2)
+        return {"up": self.up.lora_init(ku, rank), "down": self.down.lora_init(kd, rank)}
+
+    def lora_axes(self):
+        return {"up": self.up.lora_axes(), "down": self.down.lora_axes()}
+
+    def _project(self, params, x, lora, conv_state):
+        lora = lora or {}
+        b, s, _ = x.shape
+        xn = self.norm(params["norm"], x)
+        uz = self.up(params["up"], xn, lora.get("up"))
+        u, z = jnp.split(uz, 2, axis=-1)
+        u = constrain(u, ("batch", None, "mlp"))
+        uc, conv_state = causal_conv1d(u, params["conv"]["w"], state=conv_state)
+        uc = jax.nn.silu(uc)
+        q = self.wq(params["wq"], uc).reshape(b, s, self.n_heads, self.dk)
+        k = self.wk(params["wk"], uc).reshape(b, s, self.n_heads, self.dk)
+        v = uc.reshape(b, s, self.n_heads, self.dv)
+        gates = self.wif(params["wif"], uc).reshape(b, s, self.n_heads, 2)
+        q = q * (self.dk ** -0.5)
+        k = k * (self.dk ** -0.5)
+        return q, k, v, gates[..., 0], gates[..., 1], z, conv_state
+
+    def init_cache(self, batch: int, max_len: int = 0, dtype=None) -> PyTree:
+        dtype = dtype or self.dtype
+        return {
+            "C": jnp.zeros((batch, self.n_heads, self.dk, self.dv), jnp.float32),
+            "n": jnp.zeros((batch, self.n_heads, self.dk), jnp.float32),
+            "m": jnp.full((batch, self.n_heads), -1e30, jnp.float32),
+            "conv": jnp.zeros((batch, self.conv_kernel - 1, self.d_inner), dtype),
+        }
+
+    def cache_axes(self):
+        return {"C": ("batch", None, None, "state"), "n": ("batch", None, "state"),
+                "m": ("batch", None), "conv": ("batch", None, "mlp")}
+
+    def _finish(self, params, h, z, lora):
+        lora = lora or {}
+        b, s = h.shape[0], h.shape[2]
+        h = _headwise_rmsnorm(h.transpose(0, 2, 1, 3), params["hnorm"]["scale"])  # (B,S,H,Dv)
+        h = h.reshape(b, s, self.d_inner) * jax.nn.silu(z)
+        return self.down(params["down"], h, lora.get("down"))
+
+    def __call__(self, params, x, *, lora=None, state=None, positions=None):
+        y, _ = self.forward(params, x, lora=lora, state=state)
+        return y
+
+    def forward(self, params, x, *, lora=None, state=None):
+        b = x.shape[0]
+        state = state or self.init_cache(b, dtype=x.dtype)
+        q, k, v, i_pre, f_pre, z, conv_state = self._project(params, x, lora, state["conv"])
+        st = (state["C"], state["n"], state["m"])
+        h, (C, n, m) = mlstm_chunkwise(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            i_pre.transpose(0, 2, 1), f_pre.transpose(0, 2, 1), st, chunk=self.chunk)
+        y = self._finish(params, h, z, lora)
+        return x + y.astype(x.dtype), {"C": C, "n": n, "m": m, "conv": conv_state}
+
+    prefill = forward
+
+    def decode_step(self, params, x, cache, pos=None, *, lora=None):
+        del pos
+        q, k, v, i_pre, f_pre, z, conv_state = self._project(params, x, lora, cache["conv"])
+        st = (cache["C"], cache["n"], cache["m"])
+        (C, n, m), h = mlstm_recurrent_step(
+            st, q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+            v[:, 0].astype(jnp.float32), i_pre[:, 0], f_pre[:, 0])
+        # h (B,H,Dv) -> (B,H,1,Dv) for the shared output path
+        y = self._finish(params, h[:, :, None, :], z, lora)
+        return x + y.astype(x.dtype), {"C": C, "n": n, "m": m, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+class SLSTMBlock(Module):
+    """Scalar-memory LSTM with hidden-to-gate recurrence + GeGLU FFN."""
+
+    def __init__(self, d_model: int, n_heads: int, *, ffn_factor: float = 4 / 3,
+                 dtype=jnp.float32):
+        assert d_model % n_heads == 0
+        self.d_model, self.n_heads = d_model, n_heads
+        self.dh = d_model // n_heads
+        self.d_ffn = int(d_model * ffn_factor)
+        self.dtype = dtype
+        self.norm = RMSNorm(d_model, dtype=dtype)
+        self.wx = Dense(d_model, 4 * d_model, axes=("embed", "mlp"), dtype=dtype)
+        self.norm2 = RMSNorm(d_model, dtype=dtype)
+        self.ffn_up = Dense(d_model, 2 * self.d_ffn, axes=("embed", "mlp"), dtype=dtype)
+        self.ffn_down = Dense(self.d_ffn, d_model, axes=("mlp", "embed"), dtype=dtype)
+
+    def init(self, key):
+        ks = jax.random.split(key, 4)
+        # per-head recurrent weights R: (H, 4, dh, dh)
+        r = (jax.random.normal(ks[1], (self.n_heads, 4, self.dh, self.dh))
+             / math.sqrt(self.dh)).astype(self.dtype)
+        return {
+            "norm": self.norm.init(None),
+            "wx": self.wx.init(ks[0]),
+            "r": {"w": r},
+            "hnorm": {"scale": jnp.ones((self.n_heads, self.dh), self.dtype)},
+            "norm2": self.norm2.init(None),
+            "ffn_up": self.ffn_up.init(ks[2]),
+            "ffn_down": self.ffn_down.init(ks[3]),
+        }
+
+    def axes(self):
+        return {
+            "norm": self.norm.axes(),
+            "wx": self.wx.axes(),
+            "r": {"w": (None, None, "head_dim", None)},
+            "hnorm": {"scale": (None, None)},
+            "norm2": self.norm2.axes(),
+            "ffn_up": self.ffn_up.axes(),
+            "ffn_down": self.ffn_down.axes(),
+        }
+
+    def lora_init(self, key, rank: int):
+        kx, kd = jax.random.split(key, 2)
+        return {"wx": self.wx.lora_init(kx, rank), "ffn_down": self.ffn_down.lora_init(kd, rank)}
+
+    def lora_axes(self):
+        return {"wx": self.wx.lora_axes(), "ffn_down": self.ffn_down.lora_axes()}
+
+    def init_cache(self, batch: int, max_len: int = 0, dtype=None) -> PyTree:
+        z = jnp.zeros((batch, self.n_heads, self.dh), jnp.float32)
+        return {"c": z, "n": z + 0.0, "h": z + 0.0,
+                "m": jnp.full((batch, self.n_heads, self.dh), -1e30, jnp.float32)}
+
+    def cache_axes(self):
+        return {"c": ("batch", None, "head_dim"), "n": ("batch", None, "head_dim"),
+                "h": ("batch", None, "head_dim"), "m": ("batch", None, "head_dim")}
+
+    def _step(self, params, carry, gx):
+        """carry: dict of (B,H,dh); gx (B,H,4,dh) input-gate preacts."""
+        c, n, h, m = carry["c"], carry["n"], carry["h"], carry["m"]
+        rec = jnp.einsum("bhd,hgde->bhge", h.astype(self.dtype), params["r"]["w"])
+        g = gx + rec.astype(jnp.float32)
+        i_pre, f_pre, z_pre, o_pre = g[:, :, 0], g[:, :, 1], g[:, :, 2], g[:, :, 3]
+        log_f = _logsigmoid(f_pre)
+        m_new = jnp.maximum(log_f + m, i_pre)
+        fp = jnp.exp(log_f + m - m_new)
+        ip = jnp.exp(i_pre - m_new)
+        c = fp * c + ip * jnp.tanh(z_pre)
+        n = fp * n + ip
+        h_new = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1e-6)
+        return {"c": c, "n": n, "h": h_new, "m": m_new}
+
+    def _cell(self, params, x, lora, carry):
+        lora = lora or {}
+        b, s, _ = x.shape
+        xn = self.norm(params["norm"], x)
+        gx = self.wx(params["wx"], xn, lora.get("wx"))
+        gx = gx.reshape(b, s, 4, self.n_heads, self.dh).astype(jnp.float32)
+
+        def body(cy, g_t):
+            cy = self._step(params, cy, g_t.transpose(0, 2, 1, 3))  # (B,4,H,dh)->(B,H,4,dh)
+            return cy, cy["h"]
+
+        carry, hs = jax.lax.scan(body, carry, gx.transpose(1, 0, 2, 3, 4))
+        hs = _headwise_rmsnorm(hs.transpose(1, 0, 2, 3), params["hnorm"]["scale"])  # (B,S,H,dh)
+        return hs.reshape(b, s, self.d_model).astype(x.dtype), carry
+
+    def _ffn(self, params, x, lora):
+        lora = lora or {}
+        xn = self.norm2(params["norm2"], x)
+        u, g = jnp.split(self.ffn_up(params["ffn_up"], xn), 2, axis=-1)
+        return self.ffn_down(params["ffn_down"], u * jax.nn.gelu(g, approximate=True),
+                             lora.get("ffn_down"))
+
+    def __call__(self, params, x, *, lora=None, state=None, positions=None):
+        y, _ = self.forward(params, x, lora=lora, state=state)
+        return y
+
+    def forward(self, params, x, *, lora=None, state=None):
+        carry = state or self.init_cache(x.shape[0])
+        h, carry = self._cell(params, x, lora, carry)
+        x = x + h
+        x = x + self._ffn(params, x, lora)
+        return x, carry
+
+    prefill = forward
+
+    def decode_step(self, params, x, cache, pos=None, *, lora=None):
+        del pos
+        y, cache = self.forward(params, x, lora=lora, state=cache)
+        return y, cache
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM) — hymba's parallel branch
+# ---------------------------------------------------------------------------
+
+class Mamba(Module):
+    def __init__(self, d_model: int, *, d_state: int = 16, expand: int = 2,
+                 conv_kernel: int = 4, dt_rank: Optional[int] = None,
+                 dtype=jnp.float32):
+        self.d_model = d_model
+        self.d_state = d_state
+        self.d_inner = expand * d_model
+        self.conv_kernel = conv_kernel
+        self.dt_rank = dt_rank or max(16, d_model // 16)
+        self.dtype = dtype
+        self.in_proj = Dense(d_model, 2 * self.d_inner, axes=("embed", "mlp"), dtype=dtype)
+        self.x_proj = Dense(self.d_inner, self.dt_rank + 2 * d_state, axes=("mlp", None), dtype=dtype)
+        self.dt_proj = Dense(self.dt_rank, self.d_inner, bias=True, axes=(None, "mlp"), dtype=dtype)
+        self.out_proj = Dense(self.d_inner, d_model, axes=("mlp", "embed"), dtype=dtype,
+                              scale=1.0 / math.sqrt(self.d_inner))
+
+    def init(self, key):
+        ks = jax.random.split(key, 5)
+        a = jnp.broadcast_to(jnp.arange(1, self.d_state + 1, dtype=jnp.float32),
+                             (self.d_inner, self.d_state))
+        return {
+            "in_proj": self.in_proj.init(ks[0]),
+            "conv": {"w": (jax.random.normal(ks[1], (self.conv_kernel, self.d_inner)) * 0.1).astype(self.dtype)},
+            "x_proj": self.x_proj.init(ks[2]),
+            "dt_proj": self.dt_proj.init(ks[3]),
+            "a_log": jnp.log(a),
+            "d": jnp.ones((self.d_inner,), jnp.float32),
+            "out_proj": self.out_proj.init(ks[4]),
+        }
+
+    def axes(self):
+        return {
+            "in_proj": self.in_proj.axes(),
+            "conv": {"w": ("conv", "mlp")},
+            "x_proj": self.x_proj.axes(),
+            "dt_proj": self.dt_proj.axes(),
+            "a_log": ("mlp", "state"),
+            "d": ("mlp",),
+            "out_proj": self.out_proj.axes(),
+        }
+
+    def lora_init(self, key, rank: int):
+        ki, ko = jax.random.split(key, 2)
+        return {"in_proj": self.in_proj.lora_init(ki, rank),
+                "out_proj": self.out_proj.lora_init(ko, rank)}
+
+    def lora_axes(self):
+        return {"in_proj": self.in_proj.lora_axes(), "out_proj": self.out_proj.lora_axes()}
+
+    def init_cache(self, batch: int, max_len: int = 0, dtype=None) -> PyTree:
+        dtype = dtype or self.dtype
+        return {
+            "ssm": jnp.zeros((batch, self.d_inner, self.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, self.conv_kernel - 1, self.d_inner), dtype),
+        }
+
+    def cache_axes(self):
+        return {"ssm": ("batch", "mlp", "state"), "conv": ("batch", None, "mlp")}
+
+    def _inputs(self, params, x, lora, conv_state):
+        lora = lora or {}
+        xz = self.in_proj(params["in_proj"], x, lora.get("in_proj"))
+        xi, z = jnp.split(xz, 2, axis=-1)
+        xi = constrain(xi, ("batch", None, "mlp"))
+        xc, conv_state = causal_conv1d(xi, params["conv"]["w"], state=conv_state)
+        xc = jax.nn.silu(xc)
+        proj = self.x_proj(params["x_proj"], xc)
+        dt_low = proj[..., : self.dt_rank]
+        bmat = proj[..., self.dt_rank : self.dt_rank + self.d_state]
+        cmat = proj[..., self.dt_rank + self.d_state :]
+        dt = jax.nn.softplus(self.dt_proj(params["dt_proj"], dt_low)).astype(jnp.float32)
+        return xc, z, dt, bmat.astype(jnp.float32), cmat.astype(jnp.float32), conv_state
+
+    def forward(self, params, x, *, lora=None, state=None):
+        b, s, _ = x.shape
+        state = state or self.init_cache(b, dtype=x.dtype)
+        xc, z, dt, bmat, cmat, conv_state = self._inputs(params, x, lora, state["conv"])
+        a = -jnp.exp(params["a_log"])  # (Din, N)
+
+        def body(h, inp):
+            xt, dt_t, b_t, c_t = inp  # (B,Din),(B,Din),(B,N),(B,N)
+            da = jnp.exp(dt_t[..., None] * a)                       # (B,Din,N)
+            h = da * h + (dt_t * xt.astype(jnp.float32))[..., None] * b_t[:, None, :]
+            y = jnp.einsum("bdn,bn->bd", h, c_t)
+            return h, y
+
+        xs = (xc.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+              bmat.transpose(1, 0, 2), cmat.transpose(1, 0, 2))
+        h, ys = jax.lax.scan(body, state["ssm"], xs)
+        y = ys.transpose(1, 0, 2).astype(x.dtype)  # (B,S,Din)
+        y = y + xc * params["d"].astype(x.dtype)
+        y = y * jax.nn.silu(z)
+        out = self.out_proj(params["out_proj"], y, (lora or {}).get("out_proj"))
+        return out, {"ssm": h, "conv": conv_state}
+
+    def __call__(self, params, x, *, lora=None, state=None, positions=None):
+        y, _ = self.forward(params, x, lora=lora, state=state)
+        return y
+
+    prefill = forward
+
+    def decode_step(self, params, x, cache, pos=None, *, lora=None):
+        del pos
+        y, cache = self.forward(params, x, lora=lora, state=cache)
+        return y, cache

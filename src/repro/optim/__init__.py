@@ -1,0 +1,5 @@
+from repro.optim.optimizers import Optimizer, adamw, sgd, clip_by_global_norm, chain
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = ["Optimizer", "adamw", "sgd", "clip_by_global_norm", "chain",
+           "constant", "cosine_decay", "linear_warmup_cosine"]

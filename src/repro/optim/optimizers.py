@@ -1,0 +1,96 @@
+"""Pure-JAX optimizers (no optax): SGD(+momentum), AdamW, gradient
+clipping, and transformation chaining.
+
+An :class:`Optimizer` is an (init, update) pair over arbitrary pytrees;
+``update`` returns (new_params, new_state).  Learning rates may be
+floats or step-indexed schedules (callables).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+def _lr_at(lr: Schedule, step: jax.Array) -> jax.Array:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple]  # (grads, state, params) -> (params, state)
+
+
+def sgd(lr: Schedule, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mom"] = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return state
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            mom = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, state["mom"], grads)
+            params = jax.tree_util.tree_map(lambda p, m: p - lr_t * m, params, mom)
+            return params, {"step": step, "mom": mom}
+        params = jax.tree_util.tree_map(lambda p, g: p - lr_t * g, params, grads)
+        return params, {"step": step}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"step": jnp.zeros((), jnp.int32), "mu": z,
+                "nu": jax.tree_util.tree_map(jnp.zeros_like, z)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["mu"], grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            step_size = lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step_size = step_size + lr_t * weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_size).astype(p.dtype)
+
+        params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return params, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Callable[[PyTree], PyTree]:
+    def clip(grads):
+        leaves = jax.tree_util.tree_leaves(grads)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+        return jax.tree_util.tree_map(lambda g: g * scale, grads)
+    return clip
+
+
+def chain(clip: Optional[Callable[[PyTree], PyTree]], opt: Optimizer) -> Optimizer:
+    if clip is None:
+        return opt
+
+    def update(grads, state, params):
+        return opt.update(clip(grads), state, params)
+
+    return Optimizer(opt.init, update)

@@ -1,0 +1,3 @@
+from repro.serve.generate import generate, GenerationConfig
+
+__all__ = ["generate", "GenerationConfig"]

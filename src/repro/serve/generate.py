@@ -1,0 +1,70 @@
+"""Batched autoregressive generation over any ArchModel.
+
+Single jitted ``lax.scan`` over decode steps (one compiled program for
+the whole generation, cache donated between steps), with greedy /
+temperature / top-k sampling.  Works across cache kinds: KV, sliding-
+window ring buffers, MLA latents, and recurrent SSM states.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class GenerationConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0          # 0 => greedy
+    top_k: int = 0                    # 0 => full distribution
+    eos_id: Optional[int] = None
+
+
+def _sample(logits: jax.Array, cfg: GenerationConfig, key: jax.Array) -> jax.Array:
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / cfg.temperature
+    if cfg.top_k:
+        kth = jax.lax.top_k(logits, cfg.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+def generate(model, params, lora, prompt: jax.Array,
+             cfg: GenerationConfig = GenerationConfig(),
+             *, rng: Optional[jax.Array] = None,
+             max_len: Optional[int] = None) -> jax.Array:
+    """prompt (B, S) int32 -> (B, S + max_new_tokens)."""
+    b, s = prompt.shape
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    max_len = max_len or (s + cfg.max_new_tokens + 8)
+
+    cache = model.init_cache(b, max_len)
+    logits, cache = model.prefill_step(params, lora, {"tokens": prompt}, cache)
+    first = _sample(logits, cfg, rng)
+
+    def step(carry, inp):
+        tok, cache, key, done = carry
+        pos, = inp
+        key, sub = jax.random.split(key)
+        logits, cache = model.decode_fn(params, lora, {"tokens": tok[:, None]},
+                                        cache, pos)
+        nxt = _sample(logits, cfg, sub)
+        if cfg.eos_id is not None:
+            nxt = jnp.where(done, cfg.eos_id, nxt)
+            done = done | (nxt == cfg.eos_id)
+        return (nxt, cache, key, done), nxt
+
+    done0 = jnp.zeros((b,), bool)
+    if cfg.eos_id is not None:
+        done0 = done0 | (first == cfg.eos_id)
+    positions = jnp.arange(s, s + cfg.max_new_tokens - 1, dtype=jnp.int32)
+    (_, _, _, _), rest = jax.lax.scan(
+        step, (first, cache, rng, done0), (positions,))
+    out = jnp.concatenate([first[:, None], rest.T], axis=1)
+    return jnp.concatenate([prompt, out], axis=1)

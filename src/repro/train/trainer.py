@@ -1,0 +1,63 @@
+"""Train/serve step factories for the big-model path (pjit-ready).
+
+``make_train_step`` builds the canonical LoRA fine-tune step used by
+the launcher, the dry-run, and the LM examples: loss → LoRA grads →
+AdamW update.  Base parameters stay frozen (no optimizer state).
+``make_full_train_step`` is the full-fine-tune variant (baseline for
+ablations).  Serve steps wrap prefill/decode with cache donation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer, adamw, chain, clip_by_global_norm
+
+PyTree = Any
+
+
+def make_train_step(model, opt: Optional[Optimizer] = None,
+                    grad_clip: Optional[float] = 1.0):
+    """Returns train_step(params, lora, opt_state, batch) ->
+    (lora, opt_state, metrics). Differentiates LoRA only."""
+    opt = opt or adamw(1e-4, weight_decay=0.0)
+    opt = chain(clip_by_global_norm(grad_clip) if grad_clip else None, opt)
+
+    def train_step(params, lora, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda l: model.loss(params, l, batch))(lora)
+        lora, opt_state = opt.update(grads, opt_state, lora)
+        return lora, opt_state, {"loss": loss}
+
+    return train_step, opt
+
+
+def make_full_train_step(model, opt: Optional[Optimizer] = None,
+                         grad_clip: Optional[float] = 1.0):
+    """Full fine-tune variant: differentiates base params (lora=None)."""
+    opt = opt or adamw(1e-4, weight_decay=0.0)
+    opt = chain(clip_by_global_norm(grad_clip) if grad_clip else None, opt)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, None, batch))(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss}
+
+    return train_step, opt
+
+
+def make_prefill_step(model, impl: str = "chunked"):
+    def prefill_step(params, lora, batch, cache):
+        return model.prefill_step(params, lora, batch, cache, impl=impl)
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, lora, batch, cache, pos):
+        return model.decode_fn(params, lora, batch, cache, pos)
+    return decode_step

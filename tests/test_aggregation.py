@@ -1,0 +1,155 @@
+"""Server aggregation tests: Eq. 3–6 and the full stateless round."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import (agreement_mask, combine_round,
+                                    cross_task_aggregate, matu_round,
+                                    sign_similarity, task_aggregate,
+                                    topk_similar)
+from repro.core.client import ClientUpload
+from repro.core.server import MaTUServer, MaTUServerConfig
+from repro.core.unify import unify_with_modulators
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_agreement_mask_unanimous():
+    """All members agree on sign -> alpha=1 -> m_hat=1 on support."""
+    unified = jnp.array([[1.0, -1.0, 2.0], [2.0, -3.0, 1.0]])
+    masks = jnp.ones((2, 3), bool)
+    member = jnp.array([True, True])
+    m_hat = agreement_mask(masks, unified, member, rho=0.4)
+    np.testing.assert_allclose(m_hat, [1.0, 1.0, 1.0])
+
+
+def test_agreement_mask_conflict():
+    """Perfect sign conflict -> alpha=0 -> m_hat=0 (soft suppression)."""
+    unified = jnp.array([[1.0, -1.0], [-1.0, 1.0]])
+    masks = jnp.ones((2, 2), bool)
+    member = jnp.array([True, True])
+    m_hat = agreement_mask(masks, unified, member, rho=0.4)
+    np.testing.assert_allclose(m_hat, [0.0, 0.0])
+
+
+def test_agreement_mask_threshold():
+    """alpha below rho passes through as the soft value."""
+    unified = jnp.array([[1.0], [1.0], [-1.0]])
+    masks = jnp.ones((3, 1), bool)
+    member = jnp.array([True, True, True])
+    m_hat = agreement_mask(masks, unified, member, rho=0.4)
+    np.testing.assert_allclose(m_hat, [1.0 / 3.0], rtol=1e-6)  # 1/3 < 0.4
+
+
+def test_task_aggregate_single_client_identity_mask():
+    """One member, full mask: tau_hat = lambda * unified (gamma=1)."""
+    unified = jnp.array([[2.0, -4.0, 1.0], [9.0, 9.0, 9.0]])
+    masks = jnp.array([[1, 1, 1], [0, 0, 0]], bool)
+    lams = jnp.array([0.5, 7.0])
+    member = jnp.array([True, False])
+    sizes = jnp.array([10.0, 0.0])
+    tau_hat, m_hat = task_aggregate(unified, masks, lams, member, sizes)
+    np.testing.assert_allclose(tau_hat, [1.0, -2.0, 0.5])
+    np.testing.assert_allclose(m_hat, [1.0, 1.0, 1.0])
+
+
+def test_sign_similarity_bounds_and_diag():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((5, 200)), jnp.float32)
+    s = sign_similarity(x)
+    assert np.all(np.asarray(s) >= 0) and np.all(np.asarray(s) <= 1)
+    np.testing.assert_allclose(np.diag(np.asarray(s)), 1.0, atol=1e-6)
+    np.testing.assert_allclose(s, s.T, rtol=1e-6)
+
+
+def test_sign_similarity_opposites():
+    a = jnp.ones((1, 64))
+    s = sign_similarity(jnp.concatenate([a, -a]))
+    np.testing.assert_allclose(s, [[1.0, 0.0], [0.0, 1.0]], atol=1e-6)
+
+
+def test_topk_excludes_self_and_low_sim():
+    sim = jnp.array([
+        [1.0, 0.9, 0.3],
+        [0.9, 1.0, 0.6],
+        [0.3, 0.6, 1.0],
+    ])
+    w = np.asarray(topk_similar(sim, eps=0.5, kappa=2))
+    assert w[0, 0] == 0 and w[1, 1] == 0 and w[2, 2] == 0  # no self
+    assert w[0, 2] == 0                                     # below eps
+    assert w[0, 1] > 0 and w[1, 2] > 0
+
+
+def test_combine_round_norm_stability():
+    """tau^{r+1} stays on the scale of tau_hat (no geometric growth)."""
+    rng = np.random.default_rng(0)
+    tau_hats = jnp.asarray(rng.standard_normal((4, 500)), jnp.float32)
+    m_hats = jnp.ones((4, 500))
+    sim = sign_similarity(tau_hats)
+    w = topk_similar(sim, eps=0.0, kappa=3)
+    tildes = cross_task_aggregate(tau_hats, m_hats, w)
+    out = combine_round(tau_hats, tildes, w)
+    for t in range(4):
+        assert (jnp.linalg.norm(out[t])
+                <= 1.5 * jnp.linalg.norm(tau_hats[t]) + 1e-3)
+
+
+def test_matu_round_shapes_and_ablations():
+    rng = np.random.default_rng(0)
+    n, t, d = 6, 4, 300
+    unified = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    masks = jnp.asarray(rng.random((n, t, d)) > 0.5)
+    lams = jnp.asarray(rng.random((n, t)) + 0.5, jnp.float32)
+    alloc = jnp.asarray(rng.random((n, t)) > 0.4)
+    sizes = jnp.where(alloc, 100.0, 0.0)
+
+    out = matu_round(unified, masks, lams, alloc, sizes)
+    assert out.task_vectors.shape == (t, d)
+    assert out.similarity.shape == (t, t)
+
+    no_cross = matu_round(unified, masks, lams, alloc, sizes, cross_task=False)
+    np.testing.assert_allclose(no_cross.task_vectors, no_cross.tau_hats)
+
+    uni = matu_round(unified, masks, lams, alloc, sizes, uniform_cross=True)
+    assert not np.allclose(uni.task_vectors, out.task_vectors)
+
+
+def test_server_round_stateless_and_complete():
+    """Full client->server->client round: downlinks cover each client's
+    tasks; the server keeps no per-client state."""
+    rng = np.random.default_rng(0)
+    d, n_tasks = 128, 5
+    ups = []
+    for cid, tasks in enumerate([[0, 1], [1, 2], [3], [0, 4]]):
+        tvs = jnp.asarray(rng.standard_normal((len(tasks), d)), jnp.float32)
+        unified, masks, lams = unify_with_modulators(tvs)
+        ups.append(ClientUpload(cid, tasks, unified, masks, lams,
+                                [100] * len(tasks)))
+    server = MaTUServer(MaTUServerConfig(n_tasks=n_tasks))
+    down = server.round(ups)
+    assert set(down) == {0, 1, 2, 3}
+    for up in ups:
+        dl = down[up.client_id]
+        assert dl.unified.shape == (d,)
+        assert dl.masks.shape == (len(up.task_ids), d)
+        assert dl.lams.shape == (len(up.task_ids),)
+    # stateless: a second identical round gives identical output
+    server2 = MaTUServer(MaTUServerConfig(n_tasks=n_tasks))
+    down2 = server2.round(ups)
+    np.testing.assert_allclose(down[0].unified, down2[0].unified)
+
+
+def test_uplink_bits_scale_with_one_vector():
+    """MaTU uplink = 32d + k(d+32) — one fp32 vector regardless of k."""
+    d = 1000
+    up1 = ClientUpload(0, [0], jnp.zeros(d), jnp.zeros((1, d), bool),
+                       jnp.zeros(1), [1])
+    up5 = ClientUpload(0, [0, 1, 2, 3, 4], jnp.zeros(d),
+                       jnp.zeros((5, d), bool), jnp.zeros(5), [1] * 5)
+    assert up1.uplink_bits() == 32 * d + 1 * (d + 32)
+    assert up5.uplink_bits() == 32 * d + 5 * (d + 32)
+    # adapter-per-task baseline for 5 tasks costs 5*32*d
+    assert up5.uplink_bits() < 5 * 32 * d

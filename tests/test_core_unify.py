@@ -1,0 +1,96 @@
+"""Unit + property tests for task unification and modulators (Eq. 2, §3.2)."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.unify import (modulate, modulators, task_mask, task_scaler,
+                              unify, unify_with_modulators)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_unify_hand_case():
+    tvs = jnp.array([[1.0, -2.0, 0.5], [3.0, 1.0, -1.0]])
+    np.testing.assert_allclose(unify(tvs), [3.0, -2.0, -1.0])
+
+
+def test_unify_single_vector_is_identity():
+    tv = jnp.array([[0.3, -0.7, 0.0, 2.0]])
+    np.testing.assert_allclose(unify(tv), tv[0])
+
+
+def test_modulators_hand_case():
+    tvs = jnp.array([[1.0, -2.0, 0.5], [3.0, 1.0, -1.0]])
+    tau, masks, lams = unify_with_modulators(tvs)
+    np.testing.assert_array_equal(masks, [[True, True, False], [True, False, True]])
+    np.testing.assert_allclose(lams, [3.5 / 5.0, 5.0 / 4.0])
+
+
+@st.composite
+def tv_stack(draw):
+    k = draw(st.integers(1, 6))
+    d = draw(st.integers(1, 64))
+    arr = draw(hnp.arrays(np.float32, (k, d),
+                          elements=st.floats(-10, 10, width=32)))
+    return jnp.asarray(arr)
+
+
+@hypothesis.given(tv_stack())
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_unify_sign_matches_sum(tvs):
+    """σ = sgn(Σ τ): the unified vector never opposes the summed direction."""
+    u = np.asarray(unify(tvs))
+    total = np.asarray(jnp.sum(tvs, axis=0))
+    assert np.all(u * total >= 0)
+
+
+@hypothesis.given(tv_stack())
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_unify_magnitude_bounded_by_max(tvs):
+    """|τ_j| ≤ max_k |τ_kj| — election never amplifies."""
+    u = np.abs(np.asarray(unify(tvs)))
+    mx = np.max(np.abs(np.asarray(tvs)), axis=0)
+    assert np.all(u <= mx + 1e-6)
+
+
+@hypothesis.given(tv_stack())
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_scalers_nonnegative(tvs):
+    tau, masks, lams = unify_with_modulators(tvs)
+    assert np.all(np.asarray(lams) >= 0)
+
+
+@hypothesis.given(tv_stack())
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_mask_alignment(tvs):
+    """Masked unified entries always share the task vector's sign."""
+    tau, masks, lams = unify_with_modulators(tvs)
+    recon_signs = np.sign(np.asarray(tau))[None] * np.asarray(masks)
+    tv_signs = np.sign(np.asarray(tvs))
+    agree = (recon_signs == 0) | (recon_signs == tv_signs)
+    assert np.all(agree)
+
+
+def test_identical_tasks_reconstruct_exactly():
+    """K copies of the same vector: unify + modulate is lossless."""
+    tv = jnp.asarray(np.random.default_rng(0).standard_normal(128), jnp.float32)
+    stack = jnp.stack([tv, tv, tv])
+    tau, masks, lams = unify_with_modulators(stack)
+    recon = modulate(tau, masks[0], lams[0])
+    np.testing.assert_allclose(recon, tv, rtol=1e-5, atol=1e-6)
+
+
+def test_modulate_scaling_preserves_l1():
+    """λ restores the task vector's L1 mass on the masked support."""
+    rng = np.random.default_rng(1)
+    tvs = jnp.asarray(rng.standard_normal((3, 256)), jnp.float32)
+    tau, masks, lams = unify_with_modulators(tvs)
+    for i in range(3):
+        recon = modulate(tau, masks[i], lams[i])
+        np.testing.assert_allclose(jnp.sum(jnp.abs(recon)),
+                                   jnp.sum(jnp.abs(tvs[i])), rtol=1e-4)

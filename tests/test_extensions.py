@@ -1,0 +1,126 @@
+"""Tests for the beyond-paper extensions: uplink compression and the
+generation utility."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, load_arch
+from repro.fed.compression import (compressed_uplink_bits, golomb_encode_bits,
+                                   mask_entropy_bits, quantize_bf16)
+from repro.serve.generate import GenerationConfig, generate
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# -- compression ---------------------------------------------------------------
+
+def test_entropy_bound_below_dense():
+    rng = np.random.default_rng(0)
+    for p in (0.1, 0.25, 0.75, 0.9):
+        mask = rng.random(10_000) < p
+        assert mask_entropy_bits(mask) < mask.size  # beats 1 bit/entry
+
+
+def test_golomb_bits_near_entropy_for_sparse():
+    rng = np.random.default_rng(1)
+    mask = rng.random(50_000) < 0.1
+    golomb = golomb_encode_bits(mask)
+    bound = mask_entropy_bits(mask)
+    assert golomb < mask.size            # beats dense
+    assert golomb < 1.6 * bound          # within ~60% of the bound
+
+
+def test_golomb_handles_dense_by_polarity_flip():
+    rng = np.random.default_rng(2)
+    mask = rng.random(20_000) < 0.92     # dense ones
+    assert golomb_encode_bits(mask) < mask.size
+
+
+def test_bf16_transport_preserves_direction():
+    v = jax.random.normal(jax.random.PRNGKey(0), (20_000,))
+    q, cos = quantize_bf16(v)
+    assert cos > 0.999
+    # signs are what MaTU's aggregation consumes — must be preserved
+    # wherever the magnitude is representable
+    big = jnp.abs(v) > 1e-3
+    assert bool(jnp.all(jnp.sign(q)[big] == jnp.sign(v)[big]))
+
+
+def test_compressed_uplink_beats_paper_scheme():
+    """The paper's uplink is 32d + k(d+32); compression must beat it for
+    biased masks."""
+    rng = np.random.default_rng(3)
+    d, k = 8_192, 4
+    unified = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    masks = jnp.asarray(rng.random((k, d)) < 0.78)  # typical own-task density
+    paper_bits = 32 * d + k * (d + 32)
+    comp_bits = compressed_uplink_bits(unified, masks)
+    assert comp_bits < paper_bits
+    assert comp_bits < 0.75 * paper_bits  # ≥25% saving
+
+
+# -- generation ------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "xlstm-1.3b"])
+def test_generate_greedy_matches_manual(arch):
+    cfg = load_arch(arch).reduced()
+    model = cfg.build(SHAPES["decode_32k"])
+    params = model.init(jax.random.PRNGKey(0))
+    lora = model.lora_init(jax.random.PRNGKey(1))
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (2, 6), 1, cfg.vocab)
+
+    out = generate(model, params, lora, prompt,
+                   GenerationConfig(max_new_tokens=4, temperature=0.0))
+    assert out.shape == (2, 10)
+
+    # manual greedy reference via full forward
+    ref = list(np.asarray(prompt[0]))
+    for _ in range(4):
+        full, _ = model.model.forward(params, jnp.asarray([ref], jnp.int32),
+                                      lora=lora)
+        ref.append(int(jnp.argmax(full[0, -1])))
+    assert list(np.asarray(out[0])) == ref
+
+
+def test_generate_sampling_respects_top_k():
+    cfg = load_arch("qwen2-0.5b").reduced()
+    model = cfg.build(SHAPES["decode_32k"])
+    params = model.init(jax.random.PRNGKey(0))
+    lora = model.lora_init(jax.random.PRNGKey(1))
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 5), 1, cfg.vocab)
+    out1 = generate(model, params, lora, prompt,
+                    GenerationConfig(max_new_tokens=6, temperature=1.0, top_k=5),
+                    rng=jax.random.PRNGKey(3))
+    out2 = generate(model, params, lora, prompt,
+                    GenerationConfig(max_new_tokens=6, temperature=1.0, top_k=5),
+                    rng=jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(out1, out2)  # deterministic given rng
+    assert out1.shape == (1, 11)
+    assert int(out1.min()) >= 0 and int(out1.max()) < cfg.vocab
+
+
+def test_compressed_matu_strategy_accuracy_parity():
+    """compress=True must match vanilla MaTU accuracy at ≥1.5× fewer bits."""
+    from repro.data.dirichlet import dirichlet_split
+    from repro.data.synthetic import make_constellation
+    from repro.fed.simulator import FedConfig, FedSimulator
+    from repro.fed.strategies import MaTUStrategy
+    from repro.fed.testbed import MLPBackbone
+
+    con = make_constellation(n_tasks=4, n_groups=2, feat_dim=24, n_classes=6,
+                             seed=0)
+    split = dirichlet_split(n_clients=6, n_tasks=4, n_classes=6, zeta_t=0.5,
+                            tasks_per_client=2, seed=0)
+    bb = MLPBackbone(24, hidden=48, lora_rank=6)
+    cfg = FedConfig(rounds=6, local_steps=15, lr=1e-2, eval_every=6, seed=0)
+    res = {}
+    for comp in (False, True):
+        strat = MaTUStrategy(4, bb.d, compress=comp)
+        h = FedSimulator(cfg, con, split, bb, strat).run()
+        res[comp] = (h.final_mean_acc, h.mean_uplink_bits)
+    assert abs(res[True][0] - res[False][0]) < 0.05   # accuracy parity
+    assert res[True][1] < res[False][1] / 1.5          # >=1.5x fewer bits

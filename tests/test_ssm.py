@@ -1,0 +1,111 @@
+"""SSM math: chunkwise mLSTM vs the step-recurrent oracle, conv cache,
+and mamba forward/decode state consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn.ssm import (Mamba, MLSTMBlock, SLSTMBlock, causal_conv1d,
+                          mlstm_chunkwise, mlstm_recurrent_step)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("chunk", [1, 3, 8, 16])
+@pytest.mark.parametrize("s", [1, 5, 16, 33])
+def test_mlstm_chunkwise_matches_recurrent(chunk, s):
+    key = jax.random.PRNGKey(chunk * 100 + s)
+    b, h, dk, dv = 2, 3, 4, 6
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, h, s, dk)) * dk ** -0.5
+    k = jax.random.normal(ks[1], (b, h, s, dk)) * dk ** -0.5
+    v = jax.random.normal(ks[2], (b, h, s, dv))
+    i_pre = jax.random.normal(ks[3], (b, h, s))
+    f_pre = jax.random.normal(ks[4], (b, h, s)) + 2.0
+
+    state0 = (jnp.zeros((b, h, dk, dv)), jnp.zeros((b, h, dk)),
+              jnp.full((b, h), -1e30))
+
+    h_chunk, (C1, n1, m1) = mlstm_chunkwise(q, k, v, i_pre, f_pre, state0,
+                                            chunk=chunk)
+
+    st = state0
+    outs = []
+    for t in range(s):
+        st, ht = mlstm_recurrent_step(st, q[:, :, t], k[:, :, t], v[:, :, t],
+                                      i_pre[:, :, t], f_pre[:, :, t])
+    # rebuild sequentially to collect outputs
+    st = state0
+    outs = []
+    for t in range(s):
+        st, ht = mlstm_recurrent_step(st, q[:, :, t], k[:, :, t], v[:, :, t],
+                                      i_pre[:, :, t], f_pre[:, :, t])
+        outs.append(ht)
+    h_rec = jnp.stack(outs, axis=2)
+
+    np.testing.assert_allclose(h_chunk, h_rec, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(C1, st[0], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(n1, st[1], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(m1, st[2], rtol=1e-4, atol=1e-5)
+
+
+def test_mlstm_block_prefill_then_decode_matches_forward():
+    blk = MLSTMBlock(16, 2, chunk=4)
+    p = blk.init(jax.random.PRNGKey(0))
+    b, s = 2, 9
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, 16)) * 0.5
+    y_full, _ = blk.forward(p, x)
+    y_pre, state = blk.forward(p, x[:, : s - 1])
+    y_dec, _ = blk.decode_step(p, x[:, s - 1 :], state)
+    np.testing.assert_allclose(y_dec[:, 0], y_full[:, -1], rtol=1e-4, atol=1e-5)
+
+
+def test_slstm_sequential_state():
+    blk = SLSTMBlock(16, 2)
+    p = blk.init(jax.random.PRNGKey(0))
+    b, s = 2, 7
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, 16)) * 0.5
+    y_full, _ = blk.forward(p, x)
+    y_pre, state = blk.forward(p, x[:, : s - 1])
+    y_dec, _ = blk.decode_step(p, x[:, s - 1 :], state)
+    np.testing.assert_allclose(y_dec[:, 0], y_full[:, -1], rtol=1e-4, atol=1e-5)
+
+
+def test_mamba_forward_decode_consistency():
+    m = Mamba(16, d_state=4, expand=2)
+    p = m.init(jax.random.PRNGKey(0))
+    b, s = 2, 8
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, 16)) * 0.5
+    y_full, _ = m.forward(p, x)
+    y_pre, state = m.forward(p, x[:, : s - 1])
+    y_dec, _ = m.decode_step(p, x[:, s - 1 :], state)
+    np.testing.assert_allclose(y_dec[:, 0], y_full[:, -1], rtol=1e-4, atol=1e-5)
+
+
+def test_causal_conv_state_carrying():
+    """Splitting a sequence across two calls must equal one call."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 10, 5))
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, 5)) * 0.3
+    y_full, _ = causal_conv1d(x, w)
+    y1, st = causal_conv1d(x[:, :6], w)
+    y2, _ = causal_conv1d(x[:, 6:], w, state=st)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_mlstm_stability_extreme_gates():
+    """Log-space stabilisation: extreme gate pre-activations stay finite."""
+    b, h, s, dk, dv = 1, 1, 12, 4, 4
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, h, s, dk))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, h, s, dk))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, h, s, dv))
+    i_pre = jnp.asarray([[[-50, 50, 0, 30, -30, 10, 50, -50, 0, 5, -5, 20.0]]])
+    f_pre = jnp.asarray([[[50, -50, 0, 30, -30, 50, -50, 10, 0, -5, 5, -20.0]]])
+    state0 = (jnp.zeros((b, h, dk, dv)), jnp.zeros((b, h, dk)),
+              jnp.full((b, h), -1e30))
+    h_out, (C, n, m) = mlstm_chunkwise(q, k, v, i_pre, f_pre, state0, chunk=4)
+    assert jnp.all(jnp.isfinite(h_out))
+    assert jnp.all(jnp.isfinite(C)) and jnp.all(jnp.isfinite(n))

@@ -1,0 +1,168 @@
+"""Substrate tests: optimizers, schedules, checkpointing, sharding rules,
+data pipeline invariants."""
+
+import os
+import tempfile
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import load, save
+from repro.data.dirichlet import dirichlet_split
+from repro.data.synthetic import eval_batch, make_constellation, sample_task_batch
+from repro.nn.sharding import DEFAULT_RULES, resolve_spec
+from repro.optim import adamw, cosine_decay, linear_warmup_cosine, sgd
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# -- optimizers ---------------------------------------------------------------
+
+def _minimize(opt, steps=300):
+    target = jnp.asarray([3.0, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    for _ in range(steps):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state = opt.update(grads, state, params)
+    return params["w"], target
+
+
+def test_adamw_converges_quadratic():
+    w, target = _minimize(adamw(5e-2))
+    np.testing.assert_allclose(w, target, atol=1e-2)
+
+
+def test_sgd_momentum_converges():
+    w, target = _minimize(sgd(5e-2, momentum=0.9))
+    np.testing.assert_allclose(w, target, atol=1e-2)
+
+
+def test_schedules_monotone_decay():
+    sch = cosine_decay(1.0, 100)
+    vals = [float(sch(jnp.asarray(s))) for s in range(0, 101, 10)]
+    assert vals[0] == pytest.approx(1.0)
+    assert all(a >= b - 1e-6 for a, b in zip(vals, vals[1:]))
+    warm = linear_warmup_cosine(1.0, 10, 100)
+    assert float(warm(jnp.asarray(5))) == pytest.approx(0.5)
+
+
+# -- checkpointing -------------------------------------------------------------
+
+def test_ckpt_round_trip():
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.asarray([1, 2, 3], jnp.int32),
+                  "d": jnp.asarray(2.5)}}
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "ck")
+        save(path, tree, metadata={"round": 7})
+        loaded, meta = load(path, jax.tree_util.tree_map(jnp.zeros_like, tree))
+    assert meta["round"] == 7
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(loaded)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_ckpt_shape_mismatch_raises():
+    tree = {"a": jnp.zeros((2, 3))}
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "ck")
+        save(path, tree)
+        with pytest.raises(ValueError):
+            load(path, {"a": jnp.zeros((3, 2))})
+
+
+# -- sharding rules -------------------------------------------------------------
+
+def _mesh(shape=(4, 2), axes=("data", "model")):
+    devs = jax.devices("cpu")
+    if len(devs) < int(np.prod(shape)):
+        pytest.skip("not enough host devices")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def test_resolve_spec_divisibility_fallback():
+    mesh = _mesh((1, 1))
+    # with a trivial mesh everything resolves to size-1 axes: still legal
+    spec = resolve_spec(("batch", None, "mlp"), (8, 4, 16), mesh=mesh,
+                        rules=dict(DEFAULT_RULES))
+    assert spec is not None
+
+
+def test_resolve_spec_used_axes_not_reused():
+    """batch takes data; cache_seq then falls to model only."""
+    import jax.numpy as _j
+    mesh = None
+    try:
+        mesh = _mesh((2, 2))
+    except Exception:
+        pytest.skip("mesh unavailable")
+    spec = resolve_spec(("batch", "cache_seq", None, None), (4, 8, 2, 4),
+                        mesh=mesh, rules=dict(DEFAULT_RULES))
+    flat = []
+    for entry in spec:
+        if entry is None:
+            continue
+        flat.extend(entry if isinstance(entry, tuple) else (entry,))
+    assert len(flat) == len(set(flat)), f"mesh axis reused: {spec}"
+
+
+def test_resolve_spec_non_divisible_replicates():
+    mesh = _mesh((2, 2))
+    spec = resolve_spec(("heads",), (5,), mesh=mesh, rules=dict(DEFAULT_RULES))
+    assert spec == jax.sharding.PartitionSpec() or spec[0] is None
+
+
+# -- data pipeline ---------------------------------------------------------------
+
+def test_constellation_structure():
+    con = make_constellation(n_tasks=6, n_groups=3, feat_dim=16, n_classes=4,
+                             conflict_pairs=[(0, 1)], seed=0)
+    oracle = con.oracle_similarity()
+    # conflicting groups anti-correlated, same group highly correlated
+    g = [con.group_of(t) for t in range(6)]
+    for a in range(6):
+        for b in range(6):
+            if a == b:
+                continue
+            if g[a] == g[b]:
+                assert oracle[a, b] > 0.8
+            elif {g[a], g[b]} == {0, 1}:
+                assert oracle[a, b] < -0.8
+
+
+def test_sample_batch_labels_derivable():
+    con = make_constellation(n_tasks=2, n_groups=1, feat_dim=16, n_classes=4, seed=0)
+    x, y = sample_task_batch(con.tasks[0], jax.random.PRNGKey(0), 128)
+    assert x.shape == (128, 16) and y.shape == (128,)
+    assert int(y.min()) >= 0 and int(y.max()) < 4
+    # labels recoverable from de-rotated latents with the true map
+    z = x @ jnp.asarray(con.tasks[0].r)  # R^T inverse of orthogonal R
+    pred = jnp.argmax(z @ jnp.asarray(con.tasks[0].w.T), -1)
+    assert float(jnp.mean(pred == y)) > 0.9
+
+
+def test_eval_batch_deterministic():
+    con = make_constellation(n_tasks=2, n_groups=1, feat_dim=8, n_classes=4, seed=0)
+    x1, y1 = eval_batch(con.tasks[1])
+    x2, y2 = eval_batch(con.tasks[1])
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_dirichlet_split_coverage_and_single_task_mode():
+    split = dirichlet_split(n_clients=10, n_tasks=8, n_classes=4, zeta_t=0.0)
+    assert all(len(t) == 1 for t in split.tasks)
+    assert set(t for ts in split.tasks for t in ts) == set(range(8))
+
+    split2 = dirichlet_split(n_clients=12, n_tasks=8, n_classes=4,
+                             zeta_t=0.3, tasks_per_client=2, seed=3)
+    held = set(t for ts in split2.tasks for t in ts)
+    assert held == set(range(8))  # coverage guaranteed
+    for (c, t), p in split2.class_probs.items():
+        np.testing.assert_allclose(p.sum(), 1.0, rtol=1e-6)

@@ -1,0 +1,98 @@
+"""Round-engine benchmark: legacy Python-loop ``MaTUServer.round_legacy``
+vs the batched, jit-compiled ``RoundEngine`` across (N, T, d) grids.
+
+The legacy path dispatches O(T + N) eager ops per round (per-task
+stacking, ``.at[t].set`` copies of the (T, d) accumulator, per-client
+re-unification); the engine packs once and runs one fused jitted call.
+Engine timing includes packing (the honest end-to-end cost); the jit
+warm-up compile is excluded for both (steady-state serving is the
+regime the ROADMAP targets).
+
+Full mode tops out at N=32, T=30, d=2^20 — the acceptance grid for the
+refactor (≥ 3x speedup on CPU).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_detail
+from repro.core.client import ClientUpload
+from repro.core.server import MaTUServer, MaTUServerConfig
+from repro.core.unify import unify_with_modulators
+
+
+def _make_uploads(rng, n, n_tasks, d, k_lo, k_hi):
+    """Ragged round built host-side (numpy) so setup stays cheap at
+    d = 2^20; modulators come from the real client-side unification.
+    k_n is drawn from [k_lo, k_hi] — the paper's many-task clients
+    hold several tasks each (Table 2 / Fig. 5), which is the regime
+    the batched engine targets."""
+    ups = []
+    for cid in range(n):
+        kn = int(rng.integers(k_lo, k_hi + 1))
+        tasks = sorted(rng.choice(n_tasks, size=kn, replace=False).tolist())
+        tvs = jnp.asarray(rng.standard_normal((kn, d)).astype(np.float32))
+        unified, masks, lams = unify_with_modulators(tvs)
+        ups.append(ClientUpload(cid, tasks, jax.block_until_ready(unified),
+                                masks, lams,
+                                rng.integers(32, 256, size=kn).tolist()))
+    return ups
+
+
+def _block_downlinks(downs):
+    """Force every device value a round produces — ClientDownlink is a
+    plain dataclass (not a pytree), so block on its arrays explicitly
+    or async dispatch would let the timer stop before the work runs."""
+    for dl in downs.values():
+        jax.block_until_ready(dl.unified)
+        jax.block_until_ready(dl.masks)
+        jax.block_until_ready(dl.lams)
+
+
+def _time(fn, iters):
+    """Best-of-iters wall time in µs — min is the noise-robust statistic
+    on a shared/throttled host (both paths get the same treatment)."""
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        _block_downlinks(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run(quick: bool = False):
+    grids = ([(8, 8, 1 << 14, 1, 2), (16, 16, 1 << 16, 2, 3)] if quick else
+             [(16, 16, 1 << 16, 2, 3), (16, 30, 1 << 18, 2, 3),
+              (32, 30, 1 << 20, 3, 4)])
+    iters = 4
+
+    rows, detail = [], {}
+    for n, n_tasks, d, k_lo, k_hi in grids:
+        rng = np.random.default_rng(n * 1000 + n_tasks)
+        ups = _make_uploads(rng, n, n_tasks, d, k_lo, k_hi)
+        tag = f"N{n}_T{n_tasks}_d{d}"
+
+        legacy = MaTUServer(MaTUServerConfig(n_tasks=n_tasks))
+        _block_downlinks(legacy.round_legacy(ups))      # warm caches
+        us_legacy = _time(lambda: legacy.round_legacy(ups), iters)
+
+        engine = MaTUServer(MaTUServerConfig(n_tasks=n_tasks))
+        _block_downlinks(engine.round(ups))             # compile warm-up
+        us_engine = _time(lambda: engine.round(ups), iters)
+
+        speedup = us_legacy / us_engine
+        rows.append((f"round_engine/{tag}/legacy", us_legacy,
+                     f"k={k_lo}-{k_hi}"))
+        rows.append((f"round_engine/{tag}/engine", us_engine,
+                     f"{speedup:.2f}x"))
+        detail[tag] = {"us_legacy": us_legacy, "us_engine": us_engine,
+                       "speedup": speedup, "n": n, "n_tasks": n_tasks,
+                       "d": d, "k_lo": k_lo, "k_hi": k_hi}
+
+    save_detail("round_engine", detail)
+    return {"rows": rows, "detail": detail}

@@ -20,6 +20,7 @@ BENCHES = [
     "bench_scaling",     # Fig. 5: tasks-per-client scaling
     "bench_conflicts",   # Fig. 6: conflict groups + cross-task ablation
     "bench_kernels",     # Pallas kernel microbench
+    "bench_round_engine",  # batched RoundEngine vs legacy server loop
     "bench_roofline",    # Roofline from the dry-run artifacts
 ]
 

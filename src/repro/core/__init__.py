@@ -8,17 +8,26 @@ Baseline merges: FedAvg / TIES / MaT-FL grouping (repro.core.baselines)
 
 from repro.core.aggregation import (agreement_mask, cross_task_aggregate,
                                     matu_round, sign_similarity,
-                                    task_aggregate, topk_similar)
+                                    task_aggregate, topk_similar,
+                                    transfer_weights)
 from repro.core.client import ClientDownlink, ClientUpload, MaTUClient
+from repro.core.engine import (EngineConfig, EngineOutput, PackedRound,
+                               RoundEngine, batched_client_unify,
+                               pack_from_slots, pack_uploads)
 from repro.core.server import MaTUServer, MaTUServerConfig
 from repro.core.unify import (modulate, modulators, task_mask, task_scaler,
-                              unify, unify_with_modulators)
+                              unify, unify_masked, unify_with_modulators,
+                              unify_with_modulators_masked)
 
 __all__ = [
     "agreement_mask", "cross_task_aggregate", "matu_round",
     "sign_similarity", "task_aggregate", "topk_similar",
+    "transfer_weights",
     "ClientDownlink", "ClientUpload", "MaTUClient",
+    "EngineConfig", "EngineOutput", "PackedRound", "RoundEngine",
+    "batched_client_unify", "pack_from_slots", "pack_uploads",
     "MaTUServer", "MaTUServerConfig",
     "modulate", "modulators", "task_mask", "task_scaler",
-    "unify", "unify_with_modulators",
+    "unify", "unify_masked", "unify_with_modulators",
+    "unify_with_modulators_masked",
 ]

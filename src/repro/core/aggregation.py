@@ -94,6 +94,24 @@ def topk_similar(sim: jax.Array, eps: float = EPS_DEFAULT,
     return jnp.where(keep, eligible, 0.0)
 
 
+def transfer_weights(sim: jax.Array, held: jax.Array, *,
+                     eps: float = EPS_DEFAULT, kappa: int = KAPPA_DEFAULT,
+                     cross_task: bool = True,
+                     uniform_cross: bool = False) -> jax.Array:
+    """Eq. 6 neighbourhood weights from the held-masked similarity —
+    the one definition of the cross-task/uniform/off ablation switch
+    (mirrored for the kernel layer by
+    ``repro.kernels.ref.cross_weights_ref``)."""
+    heldf = held.astype(sim.dtype)
+    if not cross_task:
+        return jnp.zeros_like(sim)
+    if uniform_cross:
+        t = sim.shape[0]
+        w = (1.0 - jnp.eye(t, dtype=sim.dtype)) * heldf[None, :] * heldf[:, None]
+        return w / jnp.maximum(jnp.sum(w, 1, keepdims=True), 1.0)
+    return topk_similar(sim, eps, kappa)
+
+
 def cross_task_aggregate(tau_hats: jax.Array, m_hats: jax.Array,
                          sim_weights: jax.Array) -> jax.Array:
     """Eq. 6 — τ̃^t = Σ_{t'∈Z^t} S(t,t') · m̂^t ⊙ τ̂^{t'} for all tasks,
@@ -142,6 +160,12 @@ def matu_round(unified: jax.Array, masks: jax.Array, lams: jax.Array,
     unified (N,d); masks (N,T,d) bool (m_n^t; False where A(n,t)=0);
     lams (N,T); allocation (N,T) bool; data_sizes (N,T) float.
 
+    Tasks with no member this round (all-False allocation column) are
+    masked out of the similarity matrix and the cross-task weights, so
+    transfer never mixes in their zero task vectors under partial
+    participation.  This is the reference semantics of
+    :class:`repro.core.engine.RoundEngine`.
+
     ``cross_task=False`` and ``uniform_cross=True`` give the two
     ablation variants of Fig. 6b.
     """
@@ -151,14 +175,12 @@ def matu_round(unified: jax.Array, masks: jax.Array, lams: jax.Array,
     tau_hats, m_hats = jax.vmap(per_task, in_axes=(1, 1, 1, 1))(
         masks, lams, allocation, data_sizes)
 
-    sim = sign_similarity(tau_hats)
-    if not cross_task:
-        weights = jnp.zeros_like(sim)
-    elif uniform_cross:
-        t = sim.shape[0]
-        weights = (1.0 - jnp.eye(t, dtype=sim.dtype)) / jnp.maximum(t - 1, 1)
-    else:
-        weights = topk_similar(sim, eps, kappa)
+    held = jnp.any(allocation, axis=0)
+    heldf = held.astype(tau_hats.dtype)
+    sim = sign_similarity(tau_hats) * heldf[None, :] * heldf[:, None]
+    weights = transfer_weights(sim, held, eps=eps, kappa=kappa,
+                               cross_task=cross_task,
+                               uniform_cross=uniform_cross)
     tau_tildes = cross_task_aggregate(tau_hats, m_hats, weights)
 
     return RoundOutput(combine_round(tau_hats, tau_tildes, weights),

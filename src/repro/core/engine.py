@@ -1,0 +1,250 @@
+"""Batched, kernel-backed MaTU round engine (paper §3.2, Eq. 3–7).
+
+One jit-compiled pipeline replaces the three divergent server paths the
+repo used to carry (the Python-loop ``MaTUServer.round``, the dense
+``matu_round`` reference, and the unused Pallas kernels):
+
+  pack  →  Eq. 3+4 batched agreement/merge  →  Eq. 5 sign similarity
+        →  Eq. 6+7 cross-task transfer      →  batched downlink
+           re-unification (fused unify + mask + λ kernel)
+
+All tensor math dispatches through :func:`repro.kernels.ops.matu_round_slots`
+(dense Pallas kernels on TPU; the two-pass cache-blocked streaming
+round on CPU/GPU); ``matu_round`` in :mod:`repro.core.aggregation`
+remains the dense reference semantics the engine is tested against.
+
+Padding contract
+----------------
+A round's ragged ``List[ClientUpload]`` is packed into fixed-shape
+*slot* tensors so participation sampling keeps a static jit signature:
+
+* client axis: padded to ``n_max`` (next power of two ≥ N by default);
+  padding rows have all-invalid slots, so they drop out of every
+  reduction.
+* slot axis: each client's held tasks occupy the first k_n of
+  ``k_max`` slots (next power of two ≥ max k_n); invalid slots carry
+  zero masks/λ/sizes and the sentinel task id T.  Per-task reductions
+  are segment-sums keyed by slot task id — the sentinel bucket (index
+  T of T+1 segments) swallows all padding; downlink gathers clamp the
+  sentinel and the slot-valid mask zeroes its output.
+* task axis: always the full registry size T.  Tasks with no member
+  this round produce τ̂ = 0, m̂ = 0 (``matu_round`` semantics — the
+  legacy server reported m̂ = 1 for unheld tasks, which is unobservable
+  downstream) and are masked out of the similarity matrix so
+  cross-task transfer never mixes in zero vectors.
+
+The slot layout keeps the packed footprint and the round's work at
+O(Σ k_n · d) — the same asymptotics as the legacy ragged loop — while
+the dense (N, T, d) tensors the Pallas kernels and ``matu_round``
+consume are derived on demand (``PackedRound.dense_tensors`` /
+scatter inside the kernel path).
+
+The jit cache is keyed on (shape signature, dispatch mode); the mode is
+resolved from the environment once per call (see ``ops.resolve_mode``)
+so ``REPRO_DISABLE_PALLAS`` / ``REPRO_PALLAS_INTERPRET`` A/B checks
+never collide in the cache.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import EPS_DEFAULT, KAPPA_DEFAULT, RHO_DEFAULT
+from repro.core.client import ClientDownlink, ClientUpload
+from repro.kernels import ops
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    n_tasks: int
+    rho: float = RHO_DEFAULT
+    eps: float = EPS_DEFAULT
+    kappa: int = KAPPA_DEFAULT
+    cross_task: bool = True
+    uniform_cross: bool = False
+
+
+@dataclass
+class PackedRound:
+    """Fixed-shape slot tensors for one round + host-side metadata."""
+    client_ids: List[int]            # actual clients, row order
+    task_ids: List[List[int]]        # per client, slot order
+    unified: jax.Array               # (n_max, d) fp32
+    slot_masks: jax.Array            # (n_max, k_max, d) bool
+    slot_lams: jax.Array             # (n_max, k_max) fp32
+    slot_sizes: jax.Array            # (n_max, k_max) fp32
+    slot_tasks: jax.Array            # (n_max, k_max) int32; T = invalid sentinel
+    slot_valid: jax.Array            # (n_max, k_max) bool
+    n_tasks: int
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.client_ids)
+
+    def dense_tensors(self):
+        """Scatter to the dense per-task layout ``matu_round`` consumes:
+        (masks (N, T, d), lams (N, T), member (N, T), sizes (N, T)).
+        Test/diagnostic helper — the hot path never materialises this
+        on CPU.  Delegates to the single slot→dense contract in
+        :func:`repro.kernels.ops.slots_to_dense`."""
+        return ops.slots_to_dense(self.slot_masks, self.slot_lams,
+                                  self.slot_sizes, self.slot_valid,
+                                  self.slot_tasks, self.n_tasks)
+
+
+class EngineOutput(NamedTuple):
+    """Round results.  τ̃ is not materialised on the hot path — where
+    needed it is (2·task_vectors − tau_hats) on rows with donors."""
+    task_vectors: jax.Array          # (T, d) τ^{t,r+1}
+    tau_hats: jax.Array              # (T, d)
+    m_hats: jax.Array                # (T, d)
+    similarity: jax.Array            # (T, T), held-masked
+    down_unified: jax.Array          # (n_max, d)
+    down_masks: jax.Array            # (n_max, k_max, d) bool
+    down_lams: jax.Array             # (n_max, k_max)
+
+
+def _round_up_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def pack_uploads(uploads: Sequence[ClientUpload], n_tasks: int, *,
+                 n_max: Optional[int] = None,
+                 k_max: Optional[int] = None) -> PackedRound:
+    """Pack a ragged round of uploads into the engine's slot layout.
+
+    Pure data movement (numpy fills of O(Σ k_n · d) bytes, one
+    host→device transfer per tensor); all math stays inside the jitted
+    round.
+    """
+    n = len(uploads)
+    d = int(uploads[0].unified.shape[0])
+    n_max = n_max or _round_up_pow2(n)
+    k_max = k_max or _round_up_pow2(max(len(u.task_ids) for u in uploads))
+    if n_max < n:
+        raise ValueError(f"n_max={n_max} < round size {n}")
+
+    # np.empty + zero only the padding: the valid region is fully
+    # overwritten below, so a full np.zeros would write the big
+    # (n_max, k_max, d) buffers twice for nothing
+    unified = np.empty((n_max, d), np.float32)
+    unified[n:] = 0.0
+    slot_masks = np.empty((n_max, k_max, d), bool)
+    slot_masks[n:] = False
+    slot_lams = np.zeros((n_max, k_max), np.float32)
+    slot_sizes = np.zeros((n_max, k_max), np.float32)
+    slot_tasks = np.full((n_max, k_max), n_tasks, np.int32)
+    slot_valid = np.zeros((n_max, k_max), bool)
+
+    for i, up in enumerate(uploads):
+        k = len(up.task_ids)
+        unified[i] = np.asarray(up.unified, np.float32)
+        slot_masks[i, :k] = np.asarray(up.masks, bool)
+        slot_masks[i, k:] = False
+        slot_lams[i, :k] = np.asarray(up.lams, np.float32)
+        slot_sizes[i, :k] = np.asarray(up.data_sizes, np.float32)
+        slot_tasks[i, :k] = up.task_ids
+        slot_valid[i, :k] = True
+
+    return PackedRound([u.client_id for u in uploads],
+                       [list(u.task_ids) for u in uploads],
+                       jnp.asarray(unified), jnp.asarray(slot_masks),
+                       jnp.asarray(slot_lams), jnp.asarray(slot_sizes),
+                       jnp.asarray(slot_tasks), jnp.asarray(slot_valid),
+                       n_tasks)
+
+
+def pack_from_slots(client_ids: List[int], task_ids: List[List[int]],
+                    unified: jax.Array, slot_masks: jax.Array,
+                    slot_lams: jax.Array, slot_tasks: jax.Array,
+                    slot_valid: jax.Array, slot_sizes: jax.Array,
+                    n_tasks: int) -> PackedRound:
+    """Build a PackedRound from already-batched slot tensors (the
+    strategy's pre-packed upload path) — zero copies, the slot layout
+    IS the engine's native layout."""
+    return PackedRound(client_ids, task_ids, unified, slot_masks,
+                       slot_lams.astype(jnp.float32),
+                       slot_sizes.astype(jnp.float32),
+                       slot_tasks.astype(jnp.int32), slot_valid, n_tasks)
+
+
+def _round_impl(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
+                slot_tasks, *, cfg: EngineConfig, mode: str) -> EngineOutput:
+    """The whole server step, traced once per (shapes, mode)."""
+    out = ops.matu_round_slots(
+        unified, slot_masks, slot_lams, slot_sizes, slot_valid, slot_tasks,
+        cfg.n_tasks, rho=cfg.rho, eps=cfg.eps, kappa=cfg.kappa,
+        cross_task=cfg.cross_task, uniform_cross=cfg.uniform_cross,
+        mode=mode)
+    return EngineOutput(*out)
+
+
+class RoundEngine:
+    """Stateless per-round executor; owns only jit caches (one per
+    dispatch mode — shapes are handled by jax.jit's own cache)."""
+
+    def __init__(self, cfg: EngineConfig):
+        self.cfg = cfg
+        self._impls: Dict[str, object] = {}
+
+    def _impl(self, mode: str):
+        fn = self._impls.get(mode)
+        if fn is None:
+            import repro.core.engine as _mod
+            fn = jax.jit(functools.partial(_mod._round_impl, cfg=self.cfg,
+                                           mode=mode))
+            self._impls[mode] = fn
+        return fn
+
+    def run_packed(self, packed: PackedRound, *,
+                   mode: Optional[str] = None) -> EngineOutput:
+        mode = mode or ops.resolve_mode()
+        return self._impl(mode)(packed.unified, packed.slot_masks,
+                                packed.slot_lams, packed.slot_sizes,
+                                packed.slot_valid, packed.slot_tasks)
+
+    def downlinks(self, packed: PackedRound,
+                  out: EngineOutput) -> Dict[int, ClientDownlink]:
+        """Slice the batched downlink tensors back to ragged per-client
+        ClientDownlinks (views, no compute)."""
+        result: Dict[int, ClientDownlink] = {}
+        for i, cid in enumerate(packed.client_ids):
+            k = len(packed.task_ids[i])
+            result[cid] = ClientDownlink(out.down_unified[i],
+                                         out.down_masks[i, :k],
+                                         out.down_lams[i, :k])
+        return result
+
+    def round(self, uploads: Sequence[ClientUpload], *,
+              mode: Optional[str] = None
+              ) -> Tuple[Dict[int, ClientDownlink], EngineOutput]:
+        """Pack → run → unpack: the drop-in replacement for the legacy
+        per-task Python loop in ``MaTUServer.round``."""
+        packed = pack_uploads(uploads, self.cfg.n_tasks)
+        out = self.run_packed(packed, mode=mode)
+        return self.downlinks(packed, out), out
+
+
+# -- batched client-side unification ----------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _client_unify_jit(mode: str):
+    return jax.jit(functools.partial(ops.fused_unify, mode=mode))
+
+
+def batched_client_unify(task_vectors: jax.Array, valid: jax.Array, *,
+                         mode: Optional[str] = None):
+    """All clients' upload construction in one fused call.
+
+    task_vectors (N, k_max, d) zero-padded stacks; valid (N, k_max).
+    Returns (unified (N, d), masks (N, k_max, d) bool, lams (N, k_max))
+    — row n equals ``unify_with_modulators(task_vectors[n, valid[n]])``.
+    """
+    mode = mode or ops.resolve_mode()
+    return _client_unify_jit(mode)(task_vectors, valid)

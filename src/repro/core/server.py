@@ -1,13 +1,17 @@
 """MaTU stateless server (paper §3.2 "Many-tasks Aggregation").
 
 The server keeps NO client state across rounds — it consumes the
-round's uploads, runs Eq. 3–6 per task, and emits per-client downlinks
-(unified vector + modulators for that client's tasks).  Task identity
-(the |T|-sized registry) is the only global it needs.
+round's uploads, runs Eq. 3–7, and emits per-client downlinks (unified
+vector + modulators for that client's tasks).  Task identity (the
+|T|-sized registry) is the only global it needs.
 
-This Python-level implementation stacks only the members of each task
-(memory-lean for the fed simulator).  The dense, fully-vmapped variant
-used for the on-mesh lowering is :func:`repro.core.aggregation.matu_round`.
+Since the round-engine refactor, ``round`` is a thin wrapper over
+:class:`repro.core.engine.RoundEngine`: uploads are packed into padded
+batch tensors and the whole Eq. 3–7 pipeline runs as one jitted,
+kernel-dispatched call (see engine module docstring for the padding
+contract).  The original per-task Python loop is preserved verbatim as
+``round_legacy`` — it is the behavioural oracle for the engine's
+parity tests and the baseline of ``benchmarks/bench_round_engine.py``.
 """
 
 from __future__ import annotations
@@ -23,6 +27,7 @@ from repro.core.aggregation import (EPS_DEFAULT, KAPPA_DEFAULT, RHO_DEFAULT,
                                     sign_similarity, task_aggregate,
                                     topk_similar)
 from repro.core.client import ClientDownlink, ClientUpload
+from repro.core.engine import EngineConfig, EngineOutput, PackedRound, RoundEngine
 from repro.core.unify import unify_with_modulators
 
 
@@ -39,10 +44,38 @@ class MaTUServerConfig:
 class MaTUServer:
     def __init__(self, cfg: MaTUServerConfig):
         self.cfg = cfg
+        self.engine = RoundEngine(EngineConfig(
+            n_tasks=cfg.n_tasks, rho=cfg.rho, eps=cfg.eps, kappa=cfg.kappa,
+            cross_task=cfg.cross_task, uniform_cross=cfg.uniform_cross))
         self.last_similarity: Optional[jax.Array] = None
         self.last_task_vectors: Optional[jax.Array] = None
 
     def round(self, uploads: List[ClientUpload]) -> Dict[int, ClientDownlink]:
+        """One server step through the batched round engine."""
+        downs, out = self.engine.round(uploads)
+        self._record(out)
+        return downs
+
+    def round_packed(self, packed: PackedRound) -> Dict[int, ClientDownlink]:
+        """Server step over an already-packed batch (the strategy's
+        pre-packed upload path — skips ``pack_uploads`` entirely)."""
+        out = self.engine.run_packed(packed)
+        self._record(out)
+        return self.engine.downlinks(packed, out)
+
+    def _record(self, out: EngineOutput) -> None:
+        self.last_similarity = out.similarity
+        self.last_task_vectors = out.task_vectors
+
+    # ------------------------------------------------------------------
+    # Legacy reference path: the original host-bound per-task loop.
+    # Kept as the parity oracle for tests/test_round_engine.py and the
+    # baseline for benchmarks/bench_round_engine.py.  Matches the
+    # engine to fp tolerance (the engine's unheld-task m̂ differs — 0
+    # vs 1 here — which is unobservable in task vectors and downlinks).
+    # ------------------------------------------------------------------
+    def round_legacy(self, uploads: List[ClientUpload]
+                     ) -> Dict[int, ClientDownlink]:
         cfg = self.cfg
         d = int(uploads[0].unified.shape[0])
 

@@ -63,3 +63,33 @@ def unify_with_modulators(task_vectors: jax.Array
     tau = unify(task_vectors)
     masks, lams = modulators(task_vectors, tau)
     return tau, masks, lams
+
+
+def unify_masked(task_vectors: jax.Array, valid: jax.Array) -> jax.Array:
+    """Padding-aware unification: Eq. 2 over the rows where ``valid``.
+
+    task_vectors (K, d); valid (K,) bool.  Invalid rows are zeroed
+    before the sign election, which is exactly equivalent to dropping
+    them (zeros change neither the sign sum nor the aligned max), so
+    ``unify_masked(x, v) == unify(x[v])``.  This is the reference
+    semantics of the fused batched kernel
+    (:func:`repro.kernels.ops.fused_unify`).
+    """
+    x = task_vectors * valid.astype(task_vectors.dtype)[:, None]
+    sigma = jnp.sign(jnp.sum(x, axis=0))
+    aligned = (x * sigma[None, :]) > 0
+    mu = jnp.max(jnp.abs(x) * aligned, axis=0)
+    return sigma * mu
+
+
+def unify_with_modulators_masked(task_vectors: jax.Array, valid: jax.Array
+                                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Padding-aware ``unify_with_modulators`` for one slot-packed
+    client: invalid slots yield all-False mask rows and λ = 0."""
+    tau = unify_masked(task_vectors, valid)
+    masks = task_mask(task_vectors, tau[None, :]) & valid[:, None]
+    num = jnp.sum(jnp.abs(task_vectors * valid.astype(task_vectors.dtype)[:, None]),
+                  axis=-1)
+    den = jnp.sum(jnp.abs(jnp.where(masks, tau[None, :], 0.0)), axis=-1)
+    lams = num / jnp.maximum(den, 1e-12)
+    return tau, masks, lams

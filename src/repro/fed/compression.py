@@ -53,9 +53,16 @@ def golomb_encode_bits(mask: np.ndarray) -> int:
     return bits
 
 
+def quantize_bf16_transport(v: jax.Array) -> jax.Array:
+    """The bf16 wire transport itself (batch-shape agnostic, no host
+    sync) — the single definition of what 'compressed unified vector'
+    means; the batched strategy path calls this directly."""
+    return v.astype(jnp.bfloat16).astype(jnp.float32)
+
+
 def quantize_bf16(v: jax.Array) -> Tuple[jax.Array, float]:
-    """bf16 transport of the unified vector; returns (vector, cosine)."""
-    q = v.astype(jnp.bfloat16).astype(jnp.float32)
+    """bf16 transport of ONE unified vector; returns (vector, cosine)."""
+    q = quantize_bf16_transport(v)
     denom = jnp.linalg.norm(v) * jnp.linalg.norm(q) + 1e-12
     return q, float(jnp.dot(v, q) / denom)
 

@@ -19,7 +19,7 @@ import numpy as np
 from repro.data.dirichlet import FedSplit
 from repro.data.synthetic import Constellation, eval_batch, sample_task_batch
 from repro.fed.local import make_head, make_local_trainer
-from repro.fed.strategies import Strategy, Upload
+from repro.fed.strategies import RoundBatch, Strategy, Upload
 
 
 @dataclass
@@ -132,7 +132,11 @@ class FedSimulator:
                 uploads.append(Upload(c, list(self.split.tasks[c]),
                                       jnp.stack(tvs), sizes))
 
-            self.strategy.aggregate(uploads)
+            # hand the strategy ONE pre-packed batch: batched strategies
+            # (MaTU's round engine) consume the padded tensors directly,
+            # per-client strategies unwrap the ragged uploads list
+            self.strategy.aggregate_batch(RoundBatch.from_uploads(
+                uploads, self.con.n_tasks))
             for t, pairs in new_heads.items():
                 w = jnp.asarray([p[1] for p in pairs], jnp.float32)
                 w = w / jnp.sum(w)

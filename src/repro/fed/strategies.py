@@ -25,8 +25,10 @@ import numpy as np
 from repro.core.baselines import (cosine_similarity_matrix, greedy_group,
                                   ties_merge, weighted_average)
 from repro.core.client import ClientDownlink, ClientUpload
+from repro.core.engine import (batched_client_unify, pack_from_slots,
+                               _round_up_pow2)
 from repro.core.server import MaTUServer, MaTUServerConfig
-from repro.core.unify import modulate, unify_with_modulators
+from repro.core.unify import modulate
 
 FLOAT_BITS = 32
 
@@ -37,6 +39,72 @@ class Upload:
     task_ids: List[int]
     task_vectors: jax.Array     # (k, d) fine-tuned vectors, one per task
     data_sizes: List[int]
+
+
+@dataclass
+class RoundBatch:
+    """One round's uploads, with fixed-shape slot-packed batch tensors
+    built lazily on first access.
+
+    The simulator hands this to every strategy once per round;
+    strategies that batch their server step (MaTU's round engine) touch
+    the padded tensors and pay the O(N·k_max·d) pack exactly once,
+    while per-client strategies only ever read the ragged ``uploads``
+    list and never trigger it.  Slot axis is padded to a power of two
+    so ragged k_n keeps a static jit signature across rounds.
+    """
+    uploads: List[Upload]
+    n_tasks: int
+    k_max: int
+    _packed: Optional[tuple] = None
+
+    @classmethod
+    def from_uploads(cls, uploads: List["Upload"], n_tasks: int,
+                     k_max: Optional[int] = None) -> "RoundBatch":
+        k_max = k_max or _round_up_pow2(max(len(u.task_ids) for u in uploads))
+        return cls(list(uploads), n_tasks, k_max)
+
+    def _pack(self) -> tuple:
+        if self._packed is None:
+            n = len(self.uploads)
+            d = int(self.uploads[0].task_vectors.shape[-1])
+            tvs = np.zeros((n, self.k_max, d), np.float32)
+            valid = np.zeros((n, self.k_max), bool)
+            slot_tasks = np.full((n, self.k_max), self.n_tasks, np.int32)
+            slot_sizes = np.zeros((n, self.k_max), np.float32)
+            for i, u in enumerate(self.uploads):
+                k = len(u.task_ids)
+                tvs[i, :k] = np.asarray(u.task_vectors, np.float32)
+                valid[i, :k] = True
+                slot_tasks[i, :k] = u.task_ids
+                slot_sizes[i, :k] = u.data_sizes
+            self._packed = (jnp.asarray(tvs), jnp.asarray(valid),
+                            jnp.asarray(slot_tasks), jnp.asarray(slot_sizes))
+        return self._packed
+
+    @property
+    def task_vectors(self) -> jax.Array:   # (N, k_max, d) zero-padded stacks
+        return self._pack()[0]
+
+    @property
+    def valid(self) -> jax.Array:          # (N, k_max) bool
+        return self._pack()[1]
+
+    @property
+    def slot_tasks(self) -> jax.Array:     # (N, k_max) int32; n_tasks sentinel
+        return self._pack()[2]
+
+    @property
+    def slot_sizes(self) -> jax.Array:     # (N, k_max) fp32
+        return self._pack()[3]
+
+    @property
+    def client_ids(self) -> List[int]:
+        return [u.client_id for u in self.uploads]
+
+    @property
+    def task_ids(self) -> List[List[int]]:
+        return [list(u.task_ids) for u in self.uploads]
 
 
 class Strategy:
@@ -52,6 +120,11 @@ class Strategy:
 
     def aggregate(self, uploads: List[Upload]) -> None:
         raise NotImplementedError
+
+    def aggregate_batch(self, batch: RoundBatch) -> None:
+        """Server step from a pre-packed batch; the default unwraps to
+        the ragged per-client path.  Batched strategies override."""
+        self.aggregate(batch.uploads)
 
     def eval_vectors(self, task_id: int) -> List[jax.Array]:
         raise NotImplementedError
@@ -86,17 +159,31 @@ class MaTUStrategy(Strategy):
         return modulate(dl.unified, dl.masks[i], dl.lams[i])
 
     def aggregate(self, uploads: List[Upload]) -> None:
-        matu_ups = []
-        for u in uploads:
-            unified, masks, lams = unify_with_modulators(u.task_vectors)
-            if self.compress:
-                from repro.fed.compression import quantize_bf16
-                unified, _cos = quantize_bf16(unified)
-            matu_ups.append(ClientUpload(u.client_id, u.task_ids, unified,
-                                         masks, lams, u.data_sizes))
+        self.aggregate_batch(RoundBatch.from_uploads(uploads, self.n_tasks))
+
+    def aggregate_batch(self, batch: RoundBatch) -> None:
+        """Fully batched round: ONE fused kernel call unifies every
+        client's upload, one scatter packs the round, and the engine
+        runs Eq. 3–7 + downlink re-unification in a single jitted step.
+        The per-client Python loop the legacy path ran (unify, stack,
+        dict updates) is reduced to slicing views off batch tensors."""
+        unified, masks, lams = batched_client_unify(batch.task_vectors,
+                                                    batch.valid)
+        if self.compress:
+            from repro.fed.compression import quantize_bf16_transport
+            unified = quantize_bf16_transport(unified)   # batched round-trip
+        packed = pack_from_slots(batch.client_ids, batch.task_ids, unified,
+                                 masks, lams, batch.slot_tasks, batch.valid,
+                                 batch.slot_sizes, self.n_tasks)
+        self.downlinks.update(self.server.round_packed(packed))
+        self._last_uploads = [
+            ClientUpload(u.client_id, list(u.task_ids), unified[i],
+                         masks[i, :len(u.task_ids)],
+                         lams[i, :len(u.task_ids)], list(u.data_sizes))
+            for i, u in enumerate(batch.uploads)
+        ]
+        for u in batch.uploads:
             self.client_tasks[u.client_id] = list(u.task_ids)
-        self._last_uploads = matu_ups
-        self.downlinks.update(self.server.round(matu_ups))
 
     def eval_vectors(self, task_id: int) -> List[jax.Array]:
         return [self.server.last_task_vectors[task_id]]

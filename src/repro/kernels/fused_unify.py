@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: fused unify + task-mask + λ-scaler (Eq. 2 + §3.2
+modulators), batched over clients.
+
+Downlink construction re-unifies every client's task vectors each
+round.  Composed from the three reference ops this reads the (K, d)
+stack three times (unify, mask, scaler) and materialises the unified
+vector plus the mask stack in HBM between passes; per round that is
+O(N·K·d) extra traffic on the server's hottest loop.  This kernel
+streams each client's (K, BD) tile through VMEM once and emits the
+unified block, the mask block, and the partial λ numerator/denominator
+sums in a single pass.
+
+Layout: grid (B, d/BD), d innermost so the per-(client, slot) scalar
+accumulators (num, den) are revisited across the d sweep (zeroed on the
+first step, accumulated after — same pattern as the sign_sim kernel).
+Slot validity handles ragged k_n: invalid slots are zeroed before the
+sign election and excluded from masks, so outputs match per-client
+``unify_with_modulators`` on the valid rows exactly.
+
+Masks are emitted as fp32 {0, 1} (bool outputs hit int8 tiling
+constraints for small K); the dispatch layer casts back to bool.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 2048
+
+
+def _fused_unify_kernel(tv_ref, valid_ref, uni_ref, mask_ref, num_ref, den_ref):
+    x = tv_ref[0].astype(jnp.float32)               # (K, BD)
+    v = valid_ref[0].astype(jnp.float32)            # (K,)
+    xm = x * v[:, None]
+    sigma = jnp.sign(jnp.sum(xm, axis=0))
+    aligned = (xm * sigma[None, :]) > 0.0
+    mu = jnp.max(jnp.where(aligned, jnp.abs(xm), 0.0), axis=0)
+    tau = sigma * mu
+    uni_ref[0] = tau.astype(uni_ref.dtype)
+    mask = ((x * tau[None, :]) > 0.0).astype(jnp.float32) * v[:, None]
+    mask_ref[0] = mask.astype(mask_ref.dtype)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        num_ref[...] = jnp.zeros_like(num_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+
+    num_ref[0] += jnp.sum(jnp.abs(xm), axis=1)
+    den_ref[0] += jnp.sum(mask * jnp.abs(tau)[None, :], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def fused_unify_pallas(task_vectors: jax.Array, valid: jax.Array, *,
+                       block_d: int = BLOCK_D, interpret: bool = True):
+    """task_vectors (B, K, d); valid (B, K) bool/{0,1}.
+
+    Returns (unified (B, d), masks (B, K, d) fp32 {0,1}, num (B, K),
+    den (B, K)); λ = num / max(den, eps) is computed by the caller so
+    eps policy stays in one place (invalid slots: num = den = 0).
+    Zero-padding d is safe: padded lanes contribute nothing to num/den
+    and are sliced off the streamed outputs.
+    """
+    b, k, d = task_vectors.shape
+    pad = (-d) % block_d
+    if pad:
+        task_vectors = jnp.pad(task_vectors, ((0, 0), (0, 0), (0, pad)))
+    dp = d + pad
+    unified, masks, num, den = pl.pallas_call(
+        _fused_unify_kernel,
+        grid=(b, dp // block_d),
+        in_specs=[
+            pl.BlockSpec((1, k, block_d), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_d), lambda i, j: (i, j)),
+            pl.BlockSpec((1, k, block_d), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, dp), jnp.float32),
+            jax.ShapeDtypeStruct((b, k, dp), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(task_vectors, valid.astype(jnp.float32))
+    return unified[:, :d], masks[:, :, :d], num, den

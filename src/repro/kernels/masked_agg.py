@@ -42,6 +42,71 @@ def _masked_agg_kernel(u_ref, m_ref, lam_ref, gam_ref, tau_ref, mhat_ref, *, rho
     mhat_ref[...] = m_hat.astype(mhat_ref.dtype)
 
 
+def _masked_agg_batched_kernel(u_ref, m_ref, lam_ref, gam_ref, mem_ref,
+                               tau_ref, mhat_ref, *, rho):
+    u = u_ref[...].astype(jnp.float32)            # (N, BD)
+    m = m_ref[:, 0, :].astype(jnp.float32)        # (N, BD)
+    lam = lam_ref[:, 0].astype(jnp.float32)       # (N,)
+    gam = gam_ref[:, 0].astype(jnp.float32)       # (N,)
+    mem = mem_ref[:, 0].astype(jnp.float32)       # (N,)
+    n_t = jnp.maximum(jnp.sum(mem), 1.0)
+    masked = u * m
+    alpha = jnp.abs(jnp.sum(mem[:, None] * jnp.sign(masked), axis=0)) / n_t
+    m_hat = jnp.where(alpha >= rho, 1.0, alpha)
+    weighted = jnp.sum((gam * lam)[:, None] * masked, axis=0)
+    tau_ref[0, :] = (weighted * m_hat).astype(tau_ref.dtype)
+    mhat_ref[0, :] = m_hat.astype(mhat_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "block_d", "interpret"))
+def masked_agg_batched_pallas(unified: jax.Array, masks: jax.Array,
+                              lams: jax.Array, gammas: jax.Array,
+                              members: jax.Array, *, rho: float = 0.4,
+                              block_d: int = BLOCK_D, interpret: bool = True):
+    """Whole-round Eq. 3 + Eq. 4: every task in one launch.
+
+    unified (N, d); masks (N, T, d) {0,1} (zero rows off-membership);
+    lams/gammas/members (N, T).  ``members`` is the explicit A(n, t)
+    allocation (the agreement denominator N_t counts members even when
+    their data weight is zero, matching ``matu_round``).
+
+    Grid is (T, d/BD): each program streams one (N, BD) lane block of
+    one task through VMEM, so the (N, T, d) mask tensor is read exactly
+    once and no (T, d) intermediate ever round-trips to HBM.
+    Returns (tau_hats (T, d), m_hats (T, d)) in fp32.
+    """
+    n, d = unified.shape
+    t = masks.shape[1]
+    pad = (-d) % block_d
+    if pad:
+        unified = jnp.pad(unified, ((0, 0), (0, pad)))
+        masks = jnp.pad(masks, ((0, 0), (0, 0), (0, pad)))
+    dp = d + pad
+    kernel = functools.partial(_masked_agg_batched_kernel, rho=rho)
+    tau, m_hat = pl.pallas_call(
+        kernel,
+        grid=(t, dp // block_d),
+        in_specs=[
+            pl.BlockSpec((n, block_d), lambda i, j: (0, j)),
+            pl.BlockSpec((n, 1, block_d), lambda i, j: (0, i, j)),
+            pl.BlockSpec((n, 1), lambda i, j: (0, i)),
+            pl.BlockSpec((n, 1), lambda i, j: (0, i)),
+            pl.BlockSpec((n, 1), lambda i, j: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_d), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_d), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, dp), jnp.float32),
+            jax.ShapeDtypeStruct((t, dp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(unified, masks.astype(unified.dtype), lams.astype(jnp.float32),
+      gammas.astype(jnp.float32), members.astype(jnp.float32))
+    return tau[:, :d], m_hat[:, :d]
+
+
 @functools.partial(jax.jit, static_argnames=("rho", "block_d", "interpret"))
 def masked_agg_pallas(unified: jax.Array, masks: jax.Array, lams: jax.Array,
                       gammas: jax.Array, *, rho: float = 0.4,

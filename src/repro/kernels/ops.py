@@ -1,48 +1,216 @@
-"""Jit'd dispatch layer over the Pallas kernels.
+"""Dispatch layer over the Pallas kernels — the ONLY entry point the
+round engine (repro.core.engine) uses for Eq. 2–7 math.
 
-On TPU the kernels compile natively; everywhere else (this CPU
-container, unit tests) they run in ``interpret=True`` mode, which
-executes the kernel body in Python — bit-identical semantics, so the
-allclose sweeps in tests/test_kernels.py validate the TPU code path.
+Three dispatch modes:
 
-Set ``REPRO_DISABLE_PALLAS=1`` to force the pure-jnp reference
-implementations (used by A/B numerics checks).
+  "pallas"            natively-compiled kernels (TPU backend)
+  "pallas_interpret"  kernel bodies executed by the Pallas interpreter
+                      (bit-identical to the TPU lowering; validation
+                      path, far too slow for the CPU hot loop)
+  "ref"               pure-jnp oracles (repro.kernels.ref) — the fast
+                      XLA path on CPU/GPU
+
+Resolution (``resolve_mode``): ``REPRO_DISABLE_PALLAS=1`` forces "ref"
+everywhere; on TPU the default is "pallas"; elsewhere the default is
+"ref" unless ``REPRO_PALLAS_INTERPRET=1`` opts into interpreter-mode
+validation.  Every op also takes an explicit ``mode=`` so jitted
+callers (the round engine) can resolve once per call and key their jit
+cache on it instead of re-reading the environment at trace time.
+
+The small (T, T)-sized Eq. 6–7 ops (top-κ filter, cross-task combine)
+have no Pallas kernel — a (T, T) top-k plus a (T, T)·(T, d) MXU matmul
+is already optimal under XLA — but are still routed through here so no
+jnp-only server path remains outside this module.
 """
 
 from __future__ import annotations
 
 import os
+from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.masked_agg import masked_agg_pallas
+from repro.kernels.fused_unify import fused_unify_pallas
+from repro.kernels.masked_agg import masked_agg_batched_pallas, masked_agg_pallas
 from repro.kernels.sign_sim import sign_sim_pallas
 from repro.kernels.unify import unify_pallas
 
-
-def _use_pallas() -> bool:
-    return os.environ.get("REPRO_DISABLE_PALLAS", "0") != "1"
+MODES = ("pallas", "pallas_interpret", "ref")
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def resolve_mode() -> str:
+    """Pick the dispatch mode for the current process/backend."""
+    if os.environ.get("REPRO_DISABLE_PALLAS", "0") == "1":
+        return "ref"
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    if os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1":
+        return "pallas_interpret"
+    return "ref"
 
 
-def unify(task_vectors: jax.Array) -> jax.Array:
-    if _use_pallas():
-        return unify_pallas(task_vectors, interpret=_interpret())
-    return ref.unify_ref(task_vectors)
+def _norm(mode: Optional[str]) -> str:
+    mode = mode or resolve_mode()
+    if mode not in MODES:
+        raise ValueError(f"unknown kernel dispatch mode {mode!r}; "
+                         f"expected one of {MODES}")
+    return mode
 
 
-def masked_agg(unified, masks, lams, gammas, *, rho: float = 0.4):
-    if _use_pallas():
-        return masked_agg_pallas(unified, masks, lams, gammas, rho=rho,
-                                 interpret=_interpret())
-    return ref.masked_agg_ref(unified, masks, lams, gammas, rho)
+def unify(task_vectors: jax.Array, *, mode: Optional[str] = None) -> jax.Array:
+    """(K, d) -> (d,) task unification (Eq. 2)."""
+    mode = _norm(mode)
+    if mode == "ref":
+        return ref.unify_ref(task_vectors)
+    return unify_pallas(task_vectors, interpret=(mode == "pallas_interpret"))
 
 
-def sign_sim(tau_hats: jax.Array) -> jax.Array:
-    if _use_pallas():
-        return sign_sim_pallas(tau_hats, interpret=_interpret())
-    return ref.sign_sim_ref(tau_hats)
+def masked_agg(unified, masks, lams, gammas, *, rho: float = 0.4,
+               mode: Optional[str] = None):
+    """Single-task Eq. 3 + Eq. 4 (membership inferred from gammas>0)."""
+    mode = _norm(mode)
+    if mode == "ref":
+        return ref.masked_agg_ref(unified, masks, lams, gammas, rho)
+    return masked_agg_pallas(unified, masks, lams, gammas, rho=rho,
+                             interpret=(mode == "pallas_interpret"))
+
+
+def masked_agg_batched(unified, masks, lams, gammas, members, *,
+                       rho: float = 0.4, mode: Optional[str] = None):
+    """Whole-round Eq. 3 + Eq. 4 over packed (N, T, d) tensors."""
+    mode = _norm(mode)
+    if mode == "ref":
+        return ref.masked_agg_batched_ref(unified, masks, lams, gammas,
+                                          members, rho)
+    return masked_agg_batched_pallas(unified, masks, lams, gammas, members,
+                                     rho=rho,
+                                     interpret=(mode == "pallas_interpret"))
+
+
+def sign_sim(tau_hats: jax.Array, *, mode: Optional[str] = None) -> jax.Array:
+    """Eq. 5 sign-conflict similarity (T, d) -> (T, T)."""
+    mode = _norm(mode)
+    if mode == "ref":
+        return ref.sign_sim_ref(tau_hats)
+    return sign_sim_pallas(tau_hats, interpret=(mode == "pallas_interpret"))
+
+
+def fused_unify(task_vectors: jax.Array, valid: jax.Array, *,
+                eps: float = 1e-12, mode: Optional[str] = None):
+    """Batched unify + task-mask + λ-scaler over slot-packed clients.
+
+    task_vectors (B, K, d); valid (B, K) bool.  Returns
+    (unified (B, d), masks (B, K, d) bool, lams (B, K)) — row b equals
+    ``unify_with_modulators(task_vectors[b, valid[b]])`` on the valid
+    slots; invalid slots give zero mask rows and λ = 0.
+    """
+    mode = _norm(mode)
+    if mode == "ref":
+        unified, masks, num, den = ref.fused_unify_ref(task_vectors, valid)
+    else:
+        unified, masks, num, den = fused_unify_pallas(
+            task_vectors, valid, interpret=(mode == "pallas_interpret"))
+        masks = masks > 0.5
+    lams = num / jnp.maximum(den, eps)
+    return unified, masks, lams
+
+
+def topk_weights(sim: jax.Array, *, eps: float = 0.5, kappa: int = 3,
+                 mode: Optional[str] = None) -> jax.Array:
+    """Eq. 6 top-κ neighbourhood weights (XLA-optimal at (T, T) scale)."""
+    _norm(mode)
+    return ref.topk_weights_ref(sim, eps, kappa)
+
+
+def cross_task_combine(tau_hats: jax.Array, m_hats: jax.Array,
+                       sim_weights: jax.Array, *, mode: Optional[str] = None):
+    """Eq. 6 + Eq. 7: returns (task_vectors, tau_tildes)."""
+    _norm(mode)
+    return ref.cross_task_combine_ref(tau_hats, m_hats, sim_weights)
+
+
+def slots_to_dense(slot_masks, slot_lams, slot_sizes, slot_valid, slot_tasks,
+                   n_tasks: int):
+    """Scatter slot-packed round tensors to the dense per-task layout
+    ((N, T, d) masks, (N, T) lams/member/sizes).  Sentinel task ids
+    (== n_tasks) are scatter-dropped.  The single definition of the
+    slot→dense contract — used by the kernel round path and by
+    ``PackedRound.dense_tensors``."""
+    n, k, d = slot_masks.shape
+    rows = jnp.arange(n)[:, None]
+    masks_d = jnp.zeros((n, n_tasks, d), bool).at[rows, slot_tasks].set(
+        jnp.where(slot_valid[:, :, None], slot_masks, False), mode="drop")
+    lams_d = jnp.zeros((n, n_tasks), jnp.float32).at[rows, slot_tasks].set(
+        jnp.where(slot_valid, slot_lams, 0.0), mode="drop")
+    member_d = jnp.zeros((n, n_tasks), bool).at[rows, slot_tasks].set(
+        slot_valid, mode="drop")
+    sizes_d = jnp.zeros((n, n_tasks), jnp.float32).at[rows, slot_tasks].set(
+        jnp.where(slot_valid, slot_sizes, 0.0), mode="drop")
+    return masks_d, lams_d, member_d, sizes_d
+
+
+def _round_slots_dense(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
+                       slot_tasks, n_tasks, *, rho, eps, kappa, cross_task,
+                       uniform_cross, mode):
+    """Kernel-path round: scatter the slot tensors to the dense
+    (N, T, d) layout the Pallas kernels consume, then compose the
+    batched masked-agg, sign-sim, and fused-unify kernels.  On TPU the
+    dense read is a single HBM stream per kernel; on CPU this path is
+    validation-only (interpret mode)."""
+    masks_d, lams_d, member_d, sizes_d = slots_to_dense(
+        slot_masks, slot_lams, slot_sizes, slot_valid, slot_tasks, n_tasks)
+
+    memf = member_d.astype(jnp.float32)
+    gam = sizes_d * memf
+    gam = gam / jnp.maximum(jnp.sum(gam, axis=0, keepdims=True), 1e-12)
+    tau_hats, m_hats = masked_agg_batched(unified, masks_d, lams_d, gam,
+                                          member_d, rho=rho, mode=mode)
+    held = jnp.any(member_d, axis=0)
+    heldf = held.astype(jnp.float32)
+    sim = sign_sim(tau_hats, mode=mode) * heldf[None, :] * heldf[:, None]
+    weights = ref.cross_weights_ref(sim, held, eps=eps, kappa=kappa,
+                                    cross_task=cross_task,
+                                    uniform_cross=uniform_cross)
+    task_vectors, _tau_tildes = ref.cross_task_combine_ref(tau_hats, m_hats,
+                                                           weights)
+    # sentinel slot ids are clamped; the valid mask zeroes their output
+    tvs_slots = jnp.take(task_vectors, slot_tasks, axis=0, mode="clip")
+    uni, dmasks, num, den = fused_unify_pallas(
+        tvs_slots, slot_valid, interpret=(mode == "pallas_interpret"))
+    return (task_vectors, tau_hats, m_hats, sim,
+            uni, dmasks > 0.5, num, den)
+
+
+def matu_round_slots(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
+                     slot_tasks, n_tasks: int, *, rho: float = 0.4,
+                     eps: float = 0.5, kappa: int = 3,
+                     cross_task: bool = True, uniform_cross: bool = False,
+                     lam_eps: float = 1e-12, mode: Optional[str] = None):
+    """The full MaTU server round over slot-packed uploads — the single
+    entry point of :class:`repro.core.engine.RoundEngine`.
+
+    "ref" runs the two-pass cache-blocked streaming round
+    (O(Σk_n · d) work, d-chunked so accumulators stay cache-resident);
+    the Pallas modes scatter to the dense layout and compose the
+    batched kernels.  Returns (task_vectors, tau_hats, m_hats,
+    similarity, down_unified, down_masks, down_lams).  τ̃ is not
+    materialised (derivable as (2τ − τ̂) on rows with donors).
+    """
+    mode = _norm(mode)
+    kw = dict(rho=rho, eps=eps, kappa=kappa, cross_task=cross_task,
+              uniform_cross=uniform_cross)
+    if mode == "ref":
+        out = ref.matu_round_slots_ref(unified, slot_masks, slot_lams,
+                                       slot_sizes, slot_valid, slot_tasks,
+                                       n_tasks, **kw)
+    else:
+        out = _round_slots_dense(unified, slot_masks, slot_lams, slot_sizes,
+                                 slot_valid, slot_tasks, n_tasks,
+                                 mode=mode, **kw)
+    (task_vectors, tau_hats, m_hats, sim,
+     down_unified, down_masks, num, den) = out
+    down_lams = num / jnp.maximum(den, lam_eps)
+    return (task_vectors, tau_hats, m_hats, sim,
+            down_unified, down_masks, down_lams)

@@ -45,3 +45,281 @@ def sign_sim_ref(tau_hats: jax.Array) -> jax.Array:
     d = x.shape[-1]
     s = jnp.sign(x)
     return 0.5 * (s @ s.T / d + 1.0)
+
+
+def masked_agg_batched_ref(unified: jax.Array, masks: jax.Array,
+                           lams: jax.Array, gammas: jax.Array,
+                           members: jax.Array, rho: float):
+    """Eq. 3 + Eq. 4 fused over ALL tasks of a packed round.
+
+    unified (N, d); masks (N, T, d) {0,1} (zero rows for non-members);
+    lams/gammas/members (N, T).  ``members`` is the explicit A(n, t)
+    allocation so a member with zero data weight still counts toward
+    the agreement denominator N_t (matching ``matu_round``).
+
+    Implemented as a sequential ``lax.map`` over the task axis so peak
+    memory stays at O(N·d) regardless of T — the packed (N, T, d) mask
+    tensor is only ever sliced, never materialised in fp32.
+    Returns (tau_hats (T, d), m_hats (T, d)).
+    """
+    u = unified.astype(jnp.float32)
+    sign_u = jnp.sign(u)
+
+    def one_task(t):
+        m = masks[:, t, :].astype(jnp.float32)         # (N, d)
+        mem = members[:, t].astype(jnp.float32)        # (N,)
+        gl = (gammas[:, t] * lams[:, t]).astype(jnp.float32)
+        n_t = jnp.maximum(jnp.sum(mem), 1.0)
+        alpha = jnp.abs(jnp.einsum("n,nd->d", mem, m * sign_u)) / n_t
+        m_hat = jnp.where(alpha >= rho, 1.0, alpha)
+        tau_hat = jnp.einsum("n,nd->d", gl, m * u) * m_hat
+        return tau_hat, m_hat
+
+    return jax.lax.map(one_task, jnp.arange(masks.shape[1]))
+
+
+# d-axis streaming chunk for the CPU reference path: the per-chunk
+# working set ((N, K, dc) fp32 products, (T, dc) accumulators) stays
+# cache-resident, mirroring the Pallas kernels' VMEM grid over d.
+CHUNK_D = 1 << 14
+
+
+def _chunked(d: int, chunk: int):
+    """Pick an effective chunk (≤ requested, covering small d in one
+    step) and the padded length."""
+    c = min(chunk, max(256, 1 << (d - 1).bit_length()))
+    pad = (-d) % c
+    return c, d + pad
+
+
+def _unify_block(x, vf):
+    """Eq. 2 + modulators on one (…, K, dc) block; vf (…, K) float."""
+    xm = x * vf[..., None]
+    sigma = jnp.sign(jnp.sum(xm, axis=-2))
+    aligned = (xm * sigma[..., None, :]) > 0
+    mu = jnp.max(jnp.where(aligned, jnp.abs(xm), 0.0), axis=-2)
+    tau = sigma * mu
+    mask = ((x * tau[..., None, :]) > 0) & (vf[..., None] > 0)
+    maskf = mask.astype(jnp.float32)
+    num = jnp.sum(jnp.abs(xm), axis=-1)
+    den = jnp.sum(maskf * jnp.abs(tau)[..., None, :], axis=-1)
+    return tau, mask, num, den
+
+
+def fused_unify_ref(task_vectors: jax.Array, valid: jax.Array, *,
+                    chunk: int = CHUNK_D):
+    """Fused unify + task-mask + λ-scaler, batched over clients.
+
+    task_vectors (B, K, d) slot-packed per-task vectors (garbage/zero in
+    invalid slots); valid (B, K) bool.  Invalid slots are zeroed before
+    the sign election, so the result equals per-client
+    ``unify_with_modulators(task_vectors[b, valid[b]])`` row-for-row.
+
+    Streams the d axis in cache-sized chunks (one fori_loop writing
+    into pre-allocated buffers in place), so every input byte is read
+    once and every output byte written once.  Returns
+    (unified (B, d), masks (B, K, d) bool, num (B, K), den (B, K))
+    with λ = num / max(den, eps) left to the caller (invalid slots
+    give num = den = 0 → λ = 0).
+    """
+    b, k, d = task_vectors.shape
+    chunk, dp = _chunked(d, chunk)
+    x_p = task_vectors.astype(jnp.float32)
+    if dp != d:                      # aligned d never pays the pad copy
+        x_p = jnp.pad(x_p, ((0, 0), (0, 0), (0, dp - d)))
+    vf = valid.astype(jnp.float32)
+
+    def step(c, carry):
+        uni, msk, num, den = carry
+        off = c * chunk
+        x = jax.lax.dynamic_slice_in_dim(x_p, off, chunk, axis=2)
+        tau, mask, num_c, den_c = _unify_block(x, vf)
+        uni = jax.lax.dynamic_update_slice_in_dim(uni, tau, off, axis=1)
+        msk = jax.lax.dynamic_update_slice_in_dim(msk, mask, off, axis=2)
+        return uni, msk, num + num_c, den + den_c
+
+    uni, msk, num, den = jax.lax.fori_loop(
+        0, dp // chunk, step,
+        (jnp.zeros((b, dp), jnp.float32), jnp.zeros((b, k, dp), bool),
+         jnp.zeros((b, k), jnp.float32), jnp.zeros((b, k), jnp.float32)))
+    return uni[:, :d], msk[:, :, :d], num, den
+
+
+def cross_weights_ref(sim: jax.Array, held: jax.Array, *, eps: float,
+                      kappa: int, cross_task: bool,
+                      uniform_cross: bool) -> jax.Array:
+    """Eq. 6 neighbourhood weights from the held-masked similarity —
+    the shared (T, T)-sized logic of every round path (server, dense
+    reference, chunked slot round)."""
+    heldf = held.astype(sim.dtype)
+    if not cross_task:
+        return jnp.zeros_like(sim)
+    if uniform_cross:
+        t = sim.shape[0]
+        w = (1.0 - jnp.eye(t, dtype=sim.dtype)) * heldf[None, :] * heldf[:, None]
+        return w / jnp.maximum(jnp.sum(w, 1, keepdims=True), 1.0)
+    return topk_weights_ref(sim, eps, kappa)
+
+
+def matu_round_slots_ref(unified: jax.Array, slot_masks: jax.Array,
+                         slot_lams: jax.Array, slot_sizes: jax.Array,
+                         slot_valid: jax.Array, slot_tasks: jax.Array,
+                         n_tasks: int, *, rho: float, eps: float, kappa: int,
+                         cross_task: bool = True, uniform_cross: bool = False,
+                         chunk: int = CHUNK_D):
+    """The full MaTU server round (Eq. 3–7 + downlink re-unification)
+    over slot-packed uploads, streamed in two cache-blocked passes.
+
+    Layout: unified (N, d); slot_masks (N, K, d) bool; slot_lams /
+    slot_sizes / slot_valid (N, K); slot_tasks (N, K) int32 with the
+    sentinel ``n_tasks`` in invalid slots.  Work is O(Σ_n k_n · d) —
+    the same asymptotics as the legacy ragged loop, NOT the dense
+    O(N·T·d) — because per-task reductions are segment-sums over slot
+    rows rather than masked sums over all clients.
+
+    Pass 1 streams each d-chunk once: Eq. 3 agreement + Eq. 4 merge via
+    segment-sum into a cache-resident (T+1, dc) accumulator (sentinel
+    bucket swallows invalid slots), Eq. 5 sign-dot accumulated on the
+    fly.  The (T, T) weight logic runs between passes.  Pass 2 streams
+    chunks again: Eq. 6 mix + Eq. 7 combine, then gathers each chunk's
+    fresh task vectors straight into the fused downlink re-unification
+    while they are still cache-hot.
+
+    Returns (task_vectors, tau_hats, m_hats, similarity, down_unified,
+    down_masks, down_num, down_den).  τ̃ is not materialised on the hot
+    path — consumers can derive it as (2τ − τ̂) on rows with donors.
+    """
+    n, k, d = slot_masks.shape
+    m_rows = n * k
+    chunk, dp = _chunked(d, chunk)
+    n_seg = n_tasks + 1
+
+    ids = slot_tasks.reshape(m_rows)
+    vf = slot_valid.reshape(m_rows).astype(jnp.float32)
+    sizes = slot_sizes.reshape(m_rows).astype(jnp.float32) * vf
+    totals = jax.ops.segment_sum(sizes, ids, num_segments=n_seg)
+    gam = sizes / jnp.maximum(totals[ids], 1e-12)
+    glv = gam * slot_lams.reshape(m_rows).astype(jnp.float32) * vf
+    n_t = jax.ops.segment_sum(vf, ids, num_segments=n_seg)[:n_tasks]
+    held = n_t > 0
+
+    u_p = unified.astype(jnp.float32)
+    m_p = slot_masks
+    if dp != d:                      # aligned d never pays the pad copies
+        u_p = jnp.pad(u_p, ((0, 0), (0, dp - d)))
+        m_p = jnp.pad(m_p, ((0, 0), (0, 0), (0, dp - d)))
+
+    glv_nk = glv.reshape(n, k)
+
+    # ---- pass 1: Eq. 3 + 4 per chunk, Eq. 5 dots accumulated -------------
+    # sgn(m ⊙ τ_n) is factored as m ⊙ sgn(τ_n) (m binary), so the sign
+    # is taken once per client row, not once per slot.
+    def pass1(c, carry):
+        tau_buf, mhat_buf, dots = carry
+        off = c * chunk
+        uc = jax.lax.dynamic_slice_in_dim(u_p, off, chunk, axis=1)
+        mc = jax.lax.dynamic_slice_in_dim(m_p, off, chunk, axis=2)
+        signs = jnp.where(mc, jnp.sign(uc)[:, None, :], 0.0)
+        a_num = jax.ops.segment_sum(signs.reshape(m_rows, chunk), ids,
+                                    num_segments=n_seg)[:n_tasks]
+        recon = jnp.where(mc, (glv_nk[:, :, None] * uc[:, None, :]), 0.0)
+        tau_pre = jax.ops.segment_sum(recon.reshape(m_rows, chunk), ids,
+                                      num_segments=n_seg)[:n_tasks]
+        alpha = jnp.abs(a_num) / jnp.maximum(n_t, 1.0)[:, None]
+        m_hat = jnp.where(alpha >= rho, 1.0, alpha)
+        tau = tau_pre * m_hat
+        s = jnp.sign(tau)
+        dots = dots + s @ s.T
+        tau_buf = jax.lax.dynamic_update_slice_in_dim(tau_buf, tau, off, axis=1)
+        mhat_buf = jax.lax.dynamic_update_slice_in_dim(mhat_buf, m_hat, off,
+                                                       axis=1)
+        return tau_buf, mhat_buf, dots
+
+    tau_hats, m_hats, dots = jax.lax.fori_loop(
+        0, dp // chunk, pass1,
+        (jnp.zeros((n_tasks, dp), jnp.float32),
+         jnp.zeros((n_tasks, dp), jnp.float32),
+         jnp.zeros((n_tasks, n_tasks), jnp.float32)))
+
+    heldf = held.astype(jnp.float32)
+    sim = 0.5 * (dots / d + 1.0) * heldf[None, :] * heldf[:, None]
+    weights = cross_weights_ref(sim, held, eps=eps, kappa=kappa,
+                                cross_task=cross_task,
+                                uniform_cross=uniform_cross)
+    total_w = jnp.sum(weights, axis=1, keepdims=True)
+    norm_w = weights / jnp.maximum(total_w, 1e-12)
+    has = (total_w > 0).astype(jnp.float32)
+
+    ids_c = jnp.minimum(ids, n_tasks - 1)       # clamp sentinel for gather
+    vf_nk = vf.reshape(n, k)
+    # Eq. 7 as two precomputed row scales: τ = c1·τ̂ + c2·(m̂ ⊙ mixed)
+    c1 = (1.0 / (1.0 + has))
+    c2 = (has / (1.0 + has))
+
+    # ---- pass 2: Eq. 6 + 7 per chunk, downlink re-unify while hot --------
+    # The λ numerator Σ|τ^t| is shared by every client holding task t,
+    # so it is accumulated once per task ((T, dc) work) and gathered per
+    # slot after the loop — not recomputed per (client, slot).
+    def pass2(c, carry):
+        tv_buf, uni_buf, dmask_buf, num_t, den = carry
+        off = c * chunk
+        tau = jax.lax.dynamic_slice_in_dim(tau_hats, off, chunk, axis=1)
+        m_hat = jax.lax.dynamic_slice_in_dim(m_hats, off, chunk, axis=1)
+        tv = c1 * tau + c2 * (m_hat * (norm_w @ tau))
+        num_t = num_t + jnp.sum(jnp.abs(tv), axis=1)
+        x = jnp.take(tv, ids_c, axis=0).reshape(n, k, chunk)
+        xm = x * vf_nk[:, :, None]
+        sigma = jnp.sign(jnp.sum(xm, axis=1))                  # (N, dc)
+        # aligned max via relu(xm·σ): σ ∈ {-1,0,1} ⇒ relu(xm·σ) equals
+        # |xm| exactly on sign-aligned entries and 0 elsewhere
+        mu = jnp.max(jax.nn.relu(xm * sigma[:, None, :]), axis=1)
+        tau_n = sigma * mu
+        dmask = (x * tau_n[:, None, :] > 0) & (vf_nk[:, :, None] > 0)
+        den_c = jnp.sum(jnp.where(dmask, jnp.abs(tau_n)[:, None, :], 0.0),
+                        axis=2)
+        tv_buf = jax.lax.dynamic_update_slice_in_dim(tv_buf, tv, off, axis=1)
+        uni_buf = jax.lax.dynamic_update_slice_in_dim(uni_buf, tau_n, off,
+                                                      axis=1)
+        dmask_buf = jax.lax.dynamic_update_slice_in_dim(dmask_buf, dmask, off,
+                                                        axis=2)
+        return tv_buf, uni_buf, dmask_buf, num_t, den + den_c
+
+    tv_buf, uni_buf, dmask_buf, num_t, den = jax.lax.fori_loop(
+        0, dp // chunk, pass2,
+        (jnp.zeros((n_tasks, dp), jnp.float32),
+         jnp.zeros((n, dp), jnp.float32),
+         jnp.zeros((n, k, dp), bool),
+         jnp.zeros((n_tasks,), jnp.float32),
+         jnp.zeros((n, k), jnp.float32)))
+    num = num_t[ids_c].reshape(n, k) * vf_nk
+
+    return (tv_buf[:, :d], tau_hats[:, :d], m_hats[:, :d],
+            sim, uni_buf[:, :d], dmask_buf[:, :, :d], num, den)
+
+
+def topk_weights_ref(sim: jax.Array, eps: float, kappa: int) -> jax.Array:
+    """Eq. 6 neighbourhood Z^t as a (T, T) weight matrix (mirror of
+    ``repro.core.aggregation.topk_similar``)."""
+    t = sim.shape[0]
+    offdiag = sim * (1.0 - jnp.eye(t, dtype=sim.dtype))
+    eligible = jnp.where(offdiag > eps, offdiag, 0.0)
+    k = min(kappa, t - 1) if t > 1 else 0
+    if k == 0:
+        return jnp.zeros_like(sim)
+    vals, _ = jax.lax.top_k(eligible, k)
+    thresh = vals[:, -1:]
+    keep = (eligible >= thresh) & (eligible > 0)
+    return jnp.where(keep, eligible, 0.0)
+
+
+def cross_task_combine_ref(tau_hats: jax.Array, m_hats: jax.Array,
+                           sim_weights: jax.Array):
+    """Eq. 6 + Eq. 7 (mirror of ``cross_task_aggregate`` +
+    ``combine_round``): normalised cross-task mix, then the overview's
+    averaging.  Returns (task_vectors (T, d), tau_tildes (T, d))."""
+    total = jnp.sum(sim_weights, axis=1, keepdims=True)
+    norm_w = sim_weights / jnp.maximum(total, 1e-12)
+    tau_tildes = m_hats * jnp.einsum("ts,sd->td", norm_w, tau_hats)
+    has = (total > 0).astype(tau_hats.dtype)
+    task_vectors = (tau_hats + tau_tildes * has) / (1.0 + has)
+    return task_vectors, tau_tildes

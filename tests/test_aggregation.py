@@ -1,8 +1,5 @@
 """Server aggregation tests: Eq. 3–6 and the full stateless round."""
 
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,15 +1,25 @@
-"""Unit + property tests for task unification and modulators (Eq. 2, §3.2)."""
+"""Unit + property tests for task unification and modulators (Eq. 2, §3.2).
 
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+Hypothesis is optional: the property-based tests are skipped (not
+errored at collection) in environments without it.
+"""
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
 from repro.core.unify import (modulate, modulators, task_mask, task_scaler,
-                              unify, unify_with_modulators)
+                              unify, unify_masked, unify_with_modulators,
+                              unify_with_modulators_masked)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -31,49 +41,72 @@ def test_modulators_hand_case():
     np.testing.assert_allclose(lams, [3.5 / 5.0, 5.0 / 4.0])
 
 
-@st.composite
-def tv_stack(draw):
-    k = draw(st.integers(1, 6))
-    d = draw(st.integers(1, 64))
-    arr = draw(hnp.arrays(np.float32, (k, d),
-                          elements=st.floats(-10, 10, width=32)))
-    return jnp.asarray(arr)
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def tv_stack(draw):
+        k = draw(st.integers(1, 6))
+        d = draw(st.integers(1, 64))
+        arr = draw(hnp.arrays(np.float32, (k, d),
+                              elements=st.floats(-10, 10, width=32)))
+        return jnp.asarray(arr)
+
+    @hypothesis.given(tv_stack())
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def test_unify_sign_matches_sum(tvs):
+        """σ = sgn(Σ τ): the unified vector never opposes the summed direction."""
+        u = np.asarray(unify(tvs))
+        total = np.asarray(jnp.sum(tvs, axis=0))
+        assert np.all(u * total >= 0)
+
+    @hypothesis.given(tv_stack())
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def test_unify_magnitude_bounded_by_max(tvs):
+        """|τ_j| ≤ max_k |τ_kj| — election never amplifies."""
+        u = np.abs(np.asarray(unify(tvs)))
+        mx = np.max(np.abs(np.asarray(tvs)), axis=0)
+        assert np.all(u <= mx + 1e-6)
+
+    @hypothesis.given(tv_stack())
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def test_scalers_nonnegative(tvs):
+        tau, masks, lams = unify_with_modulators(tvs)
+        assert np.all(np.asarray(lams) >= 0)
+
+    @hypothesis.given(tv_stack())
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def test_mask_alignment(tvs):
+        """Masked unified entries always share the task vector's sign."""
+        tau, masks, lams = unify_with_modulators(tvs)
+        recon_signs = np.sign(np.asarray(tau))[None] * np.asarray(masks)
+        tv_signs = np.sign(np.asarray(tvs))
+        agree = (recon_signs == 0) | (recon_signs == tv_signs)
+        assert np.all(agree)
 
 
-@hypothesis.given(tv_stack())
-@hypothesis.settings(max_examples=50, deadline=None)
-def test_unify_sign_matches_sum(tvs):
-    """σ = sgn(Σ τ): the unified vector never opposes the summed direction."""
-    u = np.asarray(unify(tvs))
-    total = np.asarray(jnp.sum(tvs, axis=0))
-    assert np.all(u * total >= 0)
+def test_unify_masked_equals_subset():
+    """unify_masked(x, v) == unify(x[v]) — padding rows are inert."""
+    rng = np.random.default_rng(7)
+    tvs = jnp.asarray(rng.standard_normal((5, 96)), jnp.float32)
+    valid = jnp.asarray([True, False, True, True, False])
+    np.testing.assert_allclose(unify_masked(tvs, valid),
+                               unify(tvs[np.asarray(valid)]),
+                               rtol=1e-6, atol=1e-7)
 
 
-@hypothesis.given(tv_stack())
-@hypothesis.settings(max_examples=50, deadline=None)
-def test_unify_magnitude_bounded_by_max(tvs):
-    """|τ_j| ≤ max_k |τ_kj| — election never amplifies."""
-    u = np.abs(np.asarray(unify(tvs)))
-    mx = np.max(np.abs(np.asarray(tvs)), axis=0)
-    assert np.all(u <= mx + 1e-6)
-
-
-@hypothesis.given(tv_stack())
-@hypothesis.settings(max_examples=50, deadline=None)
-def test_scalers_nonnegative(tvs):
-    tau, masks, lams = unify_with_modulators(tvs)
-    assert np.all(np.asarray(lams) >= 0)
-
-
-@hypothesis.given(tv_stack())
-@hypothesis.settings(max_examples=50, deadline=None)
-def test_mask_alignment(tvs):
-    """Masked unified entries always share the task vector's sign."""
-    tau, masks, lams = unify_with_modulators(tvs)
-    recon_signs = np.sign(np.asarray(tau))[None] * np.asarray(masks)
-    tv_signs = np.sign(np.asarray(tvs))
-    agree = (recon_signs == 0) | (recon_signs == tv_signs)
-    assert np.all(agree)
+def test_unify_with_modulators_masked_matches_ragged():
+    """The padding-aware variant matches the ragged reference row-for-row
+    and zeroes the modulators of invalid slots."""
+    rng = np.random.default_rng(8)
+    tvs = jnp.asarray(rng.standard_normal((4, 128)), jnp.float32)
+    valid = jnp.asarray([True, True, False, True])
+    sel = np.asarray(valid)
+    tau_m, masks_m, lams_m = unify_with_modulators_masked(tvs, valid)
+    tau_r, masks_r, lams_r = unify_with_modulators(tvs[sel])
+    np.testing.assert_allclose(tau_m, tau_r, rtol=1e-6, atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(masks_m)[sel], np.asarray(masks_r))
+    np.testing.assert_allclose(np.asarray(lams_m)[sel], lams_r, rtol=1e-5)
+    assert not np.any(np.asarray(masks_m)[~sel])
+    np.testing.assert_allclose(np.asarray(lams_m)[~sel], 0.0)
 
 
 def test_identical_tasks_reconstruct_exactly():

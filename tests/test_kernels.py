@@ -1,17 +1,27 @@
 """Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles,
 plus hypothesis property checks.  Kernels run in interpret mode on CPU —
-bit-identical semantics to the TPU lowering path."""
+bit-identical semantics to the TPU lowering path.
 
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+Hypothesis is optional: property checks are skipped (not errored at
+collection) in environments without it.
+"""
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
 from repro.kernels import ref
-from repro.kernels.masked_agg import masked_agg_pallas
+from repro.kernels.fused_unify import fused_unify_pallas
+from repro.kernels.masked_agg import masked_agg_batched_pallas, masked_agg_pallas
 from repro.kernels.sign_sim import sign_sim_pallas
 from repro.kernels.unify import unify_pallas
 
@@ -57,15 +67,59 @@ def test_sign_sim_sweep(t, d, dtype):
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
 
 
-@hypothesis.given(
-    hnp.arrays(np.float32, hnp.array_shapes(min_dims=2, max_dims=2,
-                                            min_side=1, max_side=40),
-               elements=st.floats(-100, 100, width=32)))
-@hypothesis.settings(max_examples=30, deadline=None)
-def test_unify_property_matches_ref(arr):
-    tv = jnp.asarray(arr)
-    np.testing.assert_allclose(unify_pallas(tv, interpret=True),
-                               ref.unify_ref(tv), rtol=1e-5, atol=1e-5)
+if HAVE_HYPOTHESIS:
+    @hypothesis.given(
+        hnp.arrays(np.float32, hnp.array_shapes(min_dims=2, max_dims=2,
+                                                min_side=1, max_side=40),
+                   elements=st.floats(-100, 100, width=32)))
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def test_unify_property_matches_ref(arr):
+        tv = jnp.asarray(arr)
+        np.testing.assert_allclose(unify_pallas(tv, interpret=True),
+                                   ref.unify_ref(tv), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,t,d", [(3, 2, 100), (5, 4, 2048), (8, 6, 3333)])
+def test_masked_agg_batched_sweep(n, t, d):
+    """Whole-round kernel vs its oracle and vs T single-task launches."""
+    key = jax.random.PRNGKey(n * 13 + t * 7 + d)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    u = jax.random.normal(k1, (n, d), jnp.float32)
+    member = jax.random.uniform(k2, (n, t)) > 0.4
+    m = ((jax.random.uniform(k3, (n, t, d)) > 0.5)
+         & member[:, :, None]).astype(jnp.float32)
+    lam = jax.random.uniform(k4, (n, t)) + 0.5
+    sizes = jnp.where(member, 50.0, 0.0)
+    gam = sizes / jnp.maximum(jnp.sum(sizes, 0, keepdims=True), 1e-12)
+
+    tau_k, mh_k = masked_agg_batched_pallas(u, m, lam, gam, member,
+                                            rho=0.4, interpret=True)
+    tau_r, mh_r = ref.masked_agg_batched_ref(u, m, lam, gam, member, 0.4)
+    np.testing.assert_allclose(tau_k, tau_r, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(mh_k, mh_r, rtol=1e-6)
+    for ti in range(t):
+        tau_1, mh_1 = masked_agg_pallas(u, m[:, ti], lam[:, ti], gam[:, ti],
+                                        rho=0.4, interpret=True)
+        np.testing.assert_allclose(tau_k[ti], tau_1, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(mh_k[ti], mh_1, rtol=1e-6)
+
+
+@pytest.mark.parametrize("b,k,d", [(2, 1, 64), (4, 3, 2048), (6, 4, 5000)])
+def test_fused_unify_sweep(b, k, d):
+    """Fused unify+mask+λ kernel vs oracle, with ragged validity."""
+    key = jax.random.PRNGKey(b * 31 + k * 17 + d)
+    k1, k2 = jax.random.split(key)
+    valid = jax.random.uniform(k1, (b, k)) > 0.3
+    valid = valid.at[:, 0].set(True)            # every client holds ≥ 1 task
+    tvs = jax.random.normal(k2, (b, k, d), jnp.float32)
+    tvs = jnp.where(valid[:, :, None], tvs, 0.0)
+
+    u_k, m_k, num_k, den_k = fused_unify_pallas(tvs, valid, interpret=True)
+    u_r, m_r, num_r, den_r = ref.fused_unify_ref(tvs, valid)
+    np.testing.assert_allclose(u_k, u_r, rtol=1e-6, atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(m_k > 0.5), np.asarray(m_r))
+    np.testing.assert_allclose(num_k, num_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(den_k, den_r, rtol=1e-5, atol=1e-6)
 
 
 def test_sign_sim_padding_invariance():

@@ -1,0 +1,242 @@
+"""Round-engine parity tests: the batched, kernel-dispatched engine
+(repro.core.engine) against the legacy per-task Python-loop server, the
+dense matu_round reference, and across kernel dispatch modes.
+
+The legacy path (``MaTUServer.round_legacy``) is kept in-tree exactly
+for these tests: the engine must reproduce it to fp tolerance on
+randomized ragged uploads — varying client count, ragged k_n, and
+partial task participation.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import matu_round
+from repro.core.client import ClientUpload
+from repro.core.engine import (EngineConfig, RoundEngine,
+                               batched_client_unify, pack_uploads)
+from repro.core.server import MaTUServer, MaTUServerConfig
+from repro.core.unify import unify_with_modulators
+from repro.kernels import ops
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_uploads(rng, n, n_tasks, d, k_max, *, skew_sizes=True):
+    """Ragged random round: each client holds 1..k_max distinct tasks.
+    With n small vs n_tasks some tasks go unheld (partial participation)."""
+    ups = []
+    for cid in range(n):
+        k = int(rng.integers(1, k_max + 1))
+        tasks = sorted(rng.choice(n_tasks, size=k, replace=False).tolist())
+        tvs = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+        unified, masks, lams = unify_with_modulators(tvs)
+        sizes = (rng.integers(10, 200, size=k).tolist() if skew_sizes
+                 else [100] * k)
+        ups.append(ClientUpload(cid, tasks, unified, masks, lams, sizes))
+    return ups
+
+
+def assert_round_equal(server_a, server_b, downs_a, downs_b, uploads,
+                       rtol=1e-5, atol=1e-6):
+    np.testing.assert_allclose(server_a.last_task_vectors,
+                               server_b.last_task_vectors, rtol=rtol, atol=atol)
+    np.testing.assert_allclose(server_a.last_similarity,
+                               server_b.last_similarity, rtol=rtol, atol=atol)
+    for up in uploads:
+        a, b = downs_a[up.client_id], downs_b[up.client_id]
+        assert b.masks.shape == (len(up.task_ids), int(up.unified.shape[0]))
+        np.testing.assert_allclose(a.unified, b.unified, rtol=rtol, atol=atol)
+        np.testing.assert_array_equal(np.asarray(a.masks), np.asarray(b.masks))
+        np.testing.assert_allclose(a.lams, b.lams, rtol=1e-4, atol=atol)
+
+
+@pytest.mark.parametrize("seed,n,n_tasks,d,k_max", [
+    (0, 4, 5, 128, 3),       # partial participation likely
+    (1, 7, 6, 300, 3),
+    (2, 3, 8, 64, 2),        # heavy partial participation
+    (3, 12, 5, 200, 4),      # more clients than tasks
+    (4, 1, 4, 96, 2),        # single-client round
+])
+def test_engine_matches_legacy_server(seed, n, n_tasks, d, k_max):
+    """(a) engine output ≡ legacy MaTUServer.round on randomized ragged
+    uploads: task vectors, similarity, and every client's downlink."""
+    rng = np.random.default_rng(seed)
+    ups = random_uploads(rng, n, n_tasks, d, k_max)
+    legacy = MaTUServer(MaTUServerConfig(n_tasks=n_tasks))
+    batched = MaTUServer(MaTUServerConfig(n_tasks=n_tasks))
+    downs_legacy = legacy.round_legacy(ups)
+    downs_engine = batched.round(ups)
+    assert_round_equal(legacy, batched, downs_legacy, downs_engine, ups)
+
+
+@pytest.mark.parametrize("cross_task,uniform_cross", [
+    (True, False), (False, False), (True, True),
+])
+def test_engine_matches_legacy_ablations(cross_task, uniform_cross):
+    """Ablation variants (Fig. 6b) agree too."""
+    rng = np.random.default_rng(9)
+    ups = random_uploads(rng, 6, 5, 160, 3)
+    cfg = MaTUServerConfig(n_tasks=5, cross_task=cross_task,
+                           uniform_cross=uniform_cross)
+    legacy, batched = MaTUServer(cfg), MaTUServer(cfg)
+    downs_l = legacy.round_legacy(ups)
+    downs_e = batched.round(ups)
+    assert_round_equal(legacy, batched, downs_l, downs_e, ups)
+
+
+def test_engine_matches_matu_round_dense():
+    """The dense reference (matu_round on the packed tensors) is the
+    engine's semantics, including m̂ for unheld tasks."""
+    rng = np.random.default_rng(5)
+    ups = random_uploads(rng, 6, 5, 200, 3)
+    packed = pack_uploads(ups, 5)
+    masks, lams, member, sizes = packed.dense_tensors()
+    dense = matu_round(packed.unified, masks, lams, member, sizes)
+    engine = RoundEngine(EngineConfig(n_tasks=5))
+    out = engine.run_packed(packed)
+    np.testing.assert_allclose(out.task_vectors, dense.task_vectors,
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(out.similarity, dense.similarity,
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(out.tau_hats, dense.tau_hats,
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(out.m_hats, dense.m_hats, rtol=1e-5, atol=1e-6)
+
+
+def test_unheld_tasks_never_transfer():
+    """Satellite fix: an unheld task contributes nothing to (and receives
+    nothing from) cross-task transfer, in matu_round AND the engine."""
+    rng = np.random.default_rng(6)
+    n_tasks, d = 5, 150
+    # all clients hold tasks 0-2 only; tasks 3-4 unheld this round
+    ups = []
+    for cid in range(4):
+        tasks = [0, 1, 2]
+        tvs = jnp.asarray(rng.standard_normal((3, d)), jnp.float32)
+        unified, masks, lams = unify_with_modulators(tvs)
+        ups.append(ClientUpload(cid, tasks, unified, masks, lams, [100] * 3))
+    packed = pack_uploads(ups, n_tasks)
+    masks, lams, member, sizes = packed.dense_tensors()
+    dense = matu_round(packed.unified, masks, lams, member, sizes, eps=-1.0)
+    # unheld rows/cols of the (masked) similarity are exactly zero
+    sim = np.asarray(dense.similarity)
+    assert np.all(sim[3:] == 0) and np.all(sim[:, 3:] == 0)
+    # unheld task vectors stay zero; held ones receive no zero-vector mix
+    np.testing.assert_allclose(dense.task_vectors[3:], 0.0)
+    engine = RoundEngine(EngineConfig(n_tasks=n_tasks, eps=-1.0))
+    out = engine.run_packed(packed)
+    np.testing.assert_allclose(out.task_vectors, dense.task_vectors,
+                               rtol=1e-5, atol=1e-6)
+    # uniform_cross ablation masks unheld tasks the same way
+    uni = matu_round(packed.unified, masks, lams, member, sizes,
+                     uniform_cross=True)
+    np.testing.assert_allclose(uni.task_vectors[3:], 0.0)
+
+
+def test_batched_reunify_matches_per_client():
+    """(b) padded batched re-unification ≡ per-client
+    unify_with_modulators on each valid slot subset."""
+    rng = np.random.default_rng(3)
+    b, k, d = 7, 4, 256
+    valid = rng.random((b, k)) > 0.35
+    valid[:, 0] = True
+    tvs = rng.standard_normal((b, k, d)).astype(np.float32)
+    tvs[~valid] = 0.0
+    unified, masks, lams = batched_client_unify(jnp.asarray(tvs),
+                                                jnp.asarray(valid))
+    for i in range(b):
+        sel = valid[i]
+        tau, msk, lam = unify_with_modulators(jnp.asarray(tvs[i][sel]))
+        np.testing.assert_allclose(unified[i], tau, rtol=1e-6, atol=1e-7)
+        np.testing.assert_array_equal(np.asarray(masks[i])[sel],
+                                      np.asarray(msk))
+        np.testing.assert_allclose(np.asarray(lams[i])[sel], lam, rtol=1e-5)
+        assert not np.any(np.asarray(masks[i])[~sel])
+        np.testing.assert_allclose(np.asarray(lams[i])[~sel], 0.0)
+
+
+def test_dispatch_modes_agree(monkeypatch):
+    """(c) the pure-jnp path (REPRO_DISABLE_PALLAS=1) and the Pallas
+    interpreter path agree to 1e-5 on the full round."""
+    rng = np.random.default_rng(4)
+    ups = random_uploads(rng, 5, 4, 180, 3)
+    engine = RoundEngine(EngineConfig(n_tasks=4))
+    packed = pack_uploads(ups, 4)
+
+    monkeypatch.setenv("REPRO_DISABLE_PALLAS", "1")
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    assert ops.resolve_mode() == "ref"
+    out_ref = engine.run_packed(packed)
+
+    monkeypatch.delenv("REPRO_DISABLE_PALLAS", raising=False)
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert ops.resolve_mode() == "pallas_interpret"
+    out_pal = engine.run_packed(packed)
+
+    for a, b in zip(out_ref, out_pal):
+        if a.dtype == bool:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_static_signature_across_participation(monkeypatch):
+    """Membership padding keeps the jit signature static: rounds with
+    different client subsets of the same padded size hit one trace."""
+    rng = np.random.default_rng(8)
+    n_tasks, d = 5, 120
+    engine = RoundEngine(EngineConfig(n_tasks=n_tasks))
+    traces = {"n": 0}
+    import repro.core.engine as engine_mod
+    orig = engine_mod._round_impl
+
+    def counting(*args, **kw):
+        traces["n"] += 1
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(engine_mod, "_round_impl", counting)
+    engine._impls.clear()
+    for trial in range(3):
+        ups = random_uploads(rng, 3, n_tasks, d, 2)     # pads to n_max=4
+        packed = pack_uploads(ups, n_tasks, n_max=4, k_max=2)
+        engine.run_packed(packed)
+    assert traces["n"] == 1, f"retraced {traces['n']}x for same padded shape"
+
+
+def test_strategy_batched_aggregate_matches_legacy_loop():
+    """MaTUStrategy's pre-packed batch path ≡ the legacy per-client
+    unify + server.round_legacy composition."""
+    from repro.fed.strategies import MaTUStrategy, RoundBatch, Upload
+
+    rng = np.random.default_rng(11)
+    n_tasks, d = 5, 140
+    uploads = []
+    for cid in range(6):
+        k = int(rng.integers(1, 4))
+        tasks = sorted(rng.choice(n_tasks, size=k, replace=False).tolist())
+        tvs = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+        uploads.append(Upload(cid, tasks, tvs, rng.integers(10, 99, size=k).tolist()))
+
+    strat = MaTUStrategy(n_tasks, d)
+    strat.aggregate_batch(RoundBatch.from_uploads(uploads, n_tasks))
+
+    legacy_server = MaTUServer(MaTUServerConfig(n_tasks=n_tasks))
+    legacy_ups = []
+    for u in uploads:
+        unified, masks, lams = unify_with_modulators(u.task_vectors)
+        legacy_ups.append(ClientUpload(u.client_id, u.task_ids, unified,
+                                       masks, lams, u.data_sizes))
+    legacy_downs = legacy_server.round_legacy(legacy_ups)
+
+    np.testing.assert_allclose(strat.server.last_task_vectors,
+                               legacy_server.last_task_vectors,
+                               rtol=1e-5, atol=1e-6)
+    for u in uploads:
+        a, b = legacy_downs[u.client_id], strat.downlinks[u.client_id]
+        np.testing.assert_allclose(a.unified, b.unified, rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(a.masks), np.asarray(b.masks))
+        np.testing.assert_allclose(a.lams, b.lams, rtol=1e-4, atol=1e-6)

@@ -4,8 +4,6 @@ data pipeline invariants."""
 import os
 import tempfile
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -79,6 +77,8 @@ def test_ckpt_shape_mismatch_raises():
 # -- sharding rules -------------------------------------------------------------
 
 def _mesh(shape=(4, 2), axes=("data", "model")):
+    if not hasattr(jax.sharding, "AxisType"):
+        pytest.skip("jax.sharding.AxisType unavailable in this jax version")
     devs = jax.devices("cpu")
     if len(devs) < int(np.prod(shape)):
         pytest.skip("not enough host devices")

@@ -1,15 +1,25 @@
 """Round-engine benchmark: legacy Python-loop ``MaTUServer.round_legacy``
-vs the batched, jit-compiled ``RoundEngine`` across (N, T, d) grids.
+vs the batched ``RoundEngine`` in BOTH slot layouts — the PR 1 bool/fp32
+layout and the bit-packed/bf16 wire-format layout — across (N, T, d)
+grids, with roofline columns (wire bytes moved, achieved GB/s).
 
-The legacy path dispatches O(T + N) eager ops per round (per-task
-stacking, ``.at[t].set`` copies of the (T, d) accumulator, per-client
-re-unification); the engine packs once and runs one fused jitted call.
-Engine timing includes packing (the honest end-to-end cost); the jit
-warm-up compile is excluded for both (steady-state serving is the
-regime the ROADMAP targets).
+Each engine leg consumes its own wire format end to end: the bool leg
+gets fp32/bool uploads (what PR 1's clients produced), the packed leg
+gets bf16/uint32 uploads (what ``batched_client_unify`` now emits —
+masks never exist as dense bool anywhere on that path).  The wire-twin
+construction itself is client-side work and is excluded from the timed
+region; everything else (slot packing, the jitted round, downlink
+slicing) is timed, warm-compiled, best-of-iters.
+
+``bytes_moved`` is the padded uplink+downlink slot-buffer traffic of
+each layout (see ``_round_wire_bytes``), and ``gbps = bytes_moved /
+time`` is the achieved wire-streaming rate — the roofline axis the
+packed layout moves by shrinking bytes 8x (masks) and 2x (vectors).
+The two engine legs are timed with interleaved iterations so both
+sample the same throttling windows of a noisy shared host.
 
 Full mode tops out at N=32, T=30, d=2^20 — the acceptance grid for the
-refactor (≥ 3x speedup on CPU).
+wire-format refactor (packed ≥ 1.5x over the PR 1 bool engine on CPU).
 """
 
 from __future__ import annotations
@@ -22,8 +32,10 @@ import numpy as np
 
 from benchmarks.common import save_detail
 from repro.core.client import ClientUpload
+from repro.core.engine import _round_up_pow2
 from repro.core.server import MaTUServer, MaTUServerConfig
 from repro.core.unify import unify_with_modulators
+from repro.kernels import bitpack
 
 
 def _make_uploads(rng, n, n_tasks, d, k_lo, k_hi):
@@ -44,6 +56,41 @@ def _make_uploads(rng, n, n_tasks, d, k_lo, k_hi):
     return ups
 
 
+def _wire_uploads(ups):
+    """The packed leg's inputs: what a wire-format client transmits —
+    bf16 unified vector + bit-packed uint32 mask words.  Built once,
+    outside the timed region (the batched client path emits this
+    directly from the fused unify kernel; bool masks never exist)."""
+    out = []
+    for u in ups:
+        words = jnp.asarray(bitpack.pack_bits_np(np.asarray(u.masks)))
+        out.append(ClientUpload(u.client_id, u.task_ids,
+                                jax.block_until_ready(
+                                    u.unified.astype(jnp.bfloat16)),
+                                words, u.lams, u.data_sizes))
+    return out
+
+
+def _round_wire_bytes(ups, packed):
+    """Uplink + downlink slot-BUFFER bytes for one round in the given
+    layout — the padded tensors the engine actually streams (the
+    roofline denominator), derived from shapes via the engine's own
+    padding policy.  This deliberately includes padding rows/slots: it
+    is traffic, not transmitted bits — per-client transmitted bits are
+    ``PackedRound.wire_bits`` / ``ClientUpload.uplink_bits``.  The
+    downlink mirrors the uplink tensor shapes."""
+    d = int(ups[0].unified.shape[0])
+    n_max = _round_up_pow2(len(ups))
+    k_max = _round_up_pow2(max(len(u.task_ids) for u in ups))
+    if packed:
+        up = (2 * n_max * d                               # bf16 unified
+              + 4 * n_max * k_max * bitpack.packed_width(d)   # uint32 words
+              + 4 * n_max * k_max)                        # fp32 λ
+    else:
+        up = 4 * n_max * d + n_max * k_max * d + 4 * n_max * k_max
+    return 2 * up
+
+
 def _block_downlinks(downs):
     """Force every device value a round produces — ClientDownlink is a
     plain dataclass (not a pytree), so block on its arrays explicitly
@@ -56,7 +103,7 @@ def _block_downlinks(downs):
 
 def _time(fn, iters):
     """Best-of-iters wall time in µs — min is the noise-robust statistic
-    on a shared/throttled host (both paths get the same treatment)."""
+    on a shared/throttled host (all paths get the same treatment)."""
     best = float("inf")
     for _ in range(iters):
         t0 = time.perf_counter()
@@ -65,34 +112,81 @@ def _time(fn, iters):
     return best * 1e6
 
 
+def _time_interleaved(fns, iters):
+    """Best-of-iters for several legs with the iterations interleaved
+    (a, b, a, b, …): on a host whose throttle drifts over minutes, each
+    leg's min comes from the same time windows, so RATIOS between legs
+    stay meaningful even when absolute times wander."""
+    best = [float("inf")] * len(fns)
+    for _ in range(iters):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            _block_downlinks(fn())
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return [b * 1e6 for b in best]
+
+
 def run(quick: bool = False):
     grids = ([(8, 8, 1 << 14, 1, 2), (16, 16, 1 << 16, 2, 3)] if quick else
              [(16, 16, 1 << 16, 2, 3), (16, 30, 1 << 18, 2, 3),
               (32, 30, 1 << 20, 3, 4)])
-    iters = 4
+    # the host's throttle drifts over minutes: the A/B legs interleave
+    # and take more samples so each leg's min lands in a good window;
+    # the (slow) legacy baseline needs fewer
+    iters = 10
+    legacy_iters = 3
 
     rows, detail = [], {}
     for n, n_tasks, d, k_lo, k_hi in grids:
         rng = np.random.default_rng(n * 1000 + n_tasks)
         ups = _make_uploads(rng, n, n_tasks, d, k_lo, k_hi)
+        wire = _wire_uploads(ups)
         tag = f"N{n}_T{n_tasks}_d{d}"
 
         legacy = MaTUServer(MaTUServerConfig(n_tasks=n_tasks))
         _block_downlinks(legacy.round_legacy(ups))      # warm caches
-        us_legacy = _time(lambda: legacy.round_legacy(ups), iters)
+        us_legacy = _time(lambda: legacy.round_legacy(ups), legacy_iters)
 
-        engine = MaTUServer(MaTUServerConfig(n_tasks=n_tasks))
-        _block_downlinks(engine.round(ups))             # compile warm-up
-        us_engine = _time(lambda: engine.round(ups), iters)
+        server = MaTUServer(MaTUServerConfig(n_tasks=n_tasks))
+        engine = server.engine
+        # bool/fp32 A/B leg (the PR 1 engine, byte-for-byte) vs the
+        # packed wire-format default path, iterations interleaved
+        _block_downlinks(engine.round(ups, packed=False)[0])
+        _block_downlinks(engine.round(wire)[0])
+        us_bool, us_packed = _time_interleaved(
+            [lambda: engine.round(ups, packed=False)[0],
+             lambda: engine.round(wire)[0]], iters)
 
-        speedup = us_legacy / us_engine
+        bytes_bool = _round_wire_bytes(ups, packed=False)
+        bytes_packed = _round_wire_bytes(wire, packed=True)
+        gbps_bool = bytes_bool / (us_bool * 1e3)
+        gbps_packed = bytes_packed / (us_packed * 1e3)
+        sp_bool = us_legacy / us_bool
+        sp_packed = us_legacy / us_packed
+        ab = us_bool / us_packed
+
         rows.append((f"round_engine/{tag}/legacy", us_legacy,
                      f"k={k_lo}-{k_hi}"))
-        rows.append((f"round_engine/{tag}/engine", us_engine,
-                     f"{speedup:.2f}x"))
-        detail[tag] = {"us_legacy": us_legacy, "us_engine": us_engine,
-                       "speedup": speedup, "n": n, "n_tasks": n_tasks,
-                       "d": d, "k_lo": k_lo, "k_hi": k_hi}
+        rows.append((f"round_engine/{tag}/engine_bool", us_bool,
+                     f"{sp_bool:.2f}x {bytes_bool / 1e6:.0f}MB "
+                     f"{gbps_bool:.2f}GB/s"))
+        rows.append((f"round_engine/{tag}/engine_packed", us_packed,
+                     f"{sp_packed:.2f}x ({ab:.2f}x vs bool) "
+                     f"{bytes_packed / 1e6:.0f}MB {gbps_packed:.2f}GB/s"))
+        detail[tag] = {
+            "us_legacy": us_legacy,
+            "us_engine_bool": us_bool,
+            "us_engine_packed": us_packed,
+            "speedup_bool_vs_legacy": sp_bool,
+            "speedup_packed_vs_legacy": sp_packed,
+            "speedup_packed_vs_bool": ab,
+            "bytes_moved_bool": bytes_bool,
+            "bytes_moved_packed": bytes_packed,
+            "gbps_bool": gbps_bool,
+            "gbps_packed": gbps_packed,
+            "n": n, "n_tasks": n_tasks, "d": d,
+            "k_lo": k_lo, "k_hi": k_hi,
+        }
 
     save_detail("round_engine", detail)
     return {"rows": rows, "detail": detail}

@@ -185,3 +185,19 @@ def matu_round(unified: jax.Array, masks: jax.Array, lams: jax.Array,
 
     return RoundOutput(combine_round(tau_hats, tau_tildes, weights),
                        tau_hats, tau_tildes, m_hats, sim)
+
+
+def matu_round_packed(unified: jax.Array, mask_words: jax.Array,
+                      lams: jax.Array, allocation: jax.Array,
+                      data_sizes: jax.Array, d: int, **kw) -> RoundOutput:
+    """Wire-format adapter for :func:`matu_round`: accepts the transport
+    tensors the engine natively holds — bf16 ``unified`` (N, d) and
+    bit-packed ``mask_words`` (N, T, ceil(d/32)) uint32 — unpacks them
+    through the single ``ops.unpack_masks`` contract, and runs the dense
+    fp32 reference.  This is the oracle the packed engine's parity tests
+    compare against: same inputs, reference semantics, dense compute.
+    """
+    from repro.kernels import ops
+    masks = ops.unpack_masks(mask_words, d)
+    return matu_round(unified.astype(jnp.float32), masks, lams,
+                      allocation, data_sizes, **kw)

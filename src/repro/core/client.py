@@ -25,31 +25,75 @@ import jax.numpy as jnp
 from repro.core.unify import modulate, unify_with_modulators
 
 
+def paper_link_bits(d: int, k: int, float_bits: int = 32) -> int:
+    """The paper's per-client link accounting: one fp32 vector + per
+    task a dense-bit mask + a scalar — 32d + k(d + 32).  THE single
+    definition of the legacy/bool-layout accounting (mirrors
+    ``repro.kernels.bitpack.wire_bits`` for the packed wire)."""
+    return float_bits * d + k * (d + float_bits)
+
+
+def _link_bits(unified: jax.Array, masks: jax.Array, k: int,
+               float_bits: int) -> int:
+    """Shared up/downlink accounting: measured packed wire bits when
+    the masks travel as uint32 words, the paper formula otherwise."""
+    d = int(unified.shape[0])
+    if masks.dtype == jnp.uint32:
+        from repro.kernels.bitpack import wire_bits
+        return wire_bits(d, k, vec_bytes_per_elem=unified.dtype.itemsize,
+                         float_bits=float_bits)
+    return paper_link_bits(d, k, float_bits)
+
+
+def _masks_dense(unified: jax.Array, masks: jax.Array) -> jax.Array:
+    """Dense bool (k, d) view of modulator masks, whichever layout they
+    travel in (the single ``ops.unpack_masks`` contract)."""
+    if masks.dtype != jnp.uint32:
+        return masks
+    from repro.kernels import ops
+    return ops.unpack_masks(masks, int(unified.shape[0]))
+
+
 @dataclass
 class ClientUpload:
     client_id: int
     task_ids: List[int]
-    unified: jax.Array          # (d,)
-    masks: jax.Array            # (k, d) bool
+    unified: jax.Array          # (d,) fp32 | bf16 (wire)
+    masks: jax.Array            # (k, d) bool | (k, ceil(d/32)) uint32 (wire)
     lams: jax.Array             # (k,)
     data_sizes: List[int]
 
+    @property
+    def packed(self) -> bool:
+        return self.masks.dtype == jnp.uint32
+
+    def masks_dense(self) -> jax.Array:
+        return _masks_dense(self.unified, self.masks)
+
     def uplink_bits(self, float_bits: int = 32) -> int:
-        d = int(self.unified.shape[0])
-        k = len(self.task_ids)
-        return float_bits * d + k * (d + float_bits)
+        """Uplink size in bits.  For wire-format uploads this is
+        *measured* off the actual buffers (bf16 vector + packed words);
+        for legacy bool uploads it is the paper's 32d + k(d+32)."""
+        return _link_bits(self.unified, self.masks, len(self.task_ids),
+                          float_bits)
 
 
 @dataclass
 class ClientDownlink:
-    unified: jax.Array          # (d,)
-    masks: jax.Array            # (k, d) bool
+    unified: jax.Array          # (d,) fp32 | bf16 (wire)
+    masks: jax.Array            # (k, d) bool | (k, ceil(d/32)) uint32 (wire)
     lams: jax.Array             # (k,)
 
+    @property
+    def packed(self) -> bool:
+        return self.masks.dtype == jnp.uint32
+
+    def masks_dense(self) -> jax.Array:
+        return _masks_dense(self.unified, self.masks)
+
     def downlink_bits(self, float_bits: int = 32) -> int:
-        d = int(self.unified.shape[0])
-        k = int(self.masks.shape[0])
-        return float_bits * d + k * (d + float_bits)
+        return _link_bits(self.unified, self.masks,
+                          int(self.masks.shape[0]), float_bits)
 
 
 class MaTUClient:

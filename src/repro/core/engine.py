@@ -8,10 +8,11 @@ repo used to carry (the Python-loop ``MaTUServer.round``, the dense
         →  Eq. 6+7 cross-task transfer      →  batched downlink
            re-unification (fused unify + mask + λ kernel)
 
-All tensor math dispatches through :func:`repro.kernels.ops.matu_round_slots`
-(dense Pallas kernels on TPU; the two-pass cache-blocked streaming
-round on CPU/GPU); ``matu_round`` in :mod:`repro.core.aggregation`
-remains the dense reference semantics the engine is tested against.
+All tensor math dispatches through
+:func:`repro.kernels.ops.matu_round_slots_packed` (packed Pallas
+kernels on TPU; the two-pass cache-blocked packed streaming round on
+CPU/GPU); ``matu_round`` in :mod:`repro.core.aggregation` remains the
+dense reference semantics the engine is tested against.
 
 Padding contract
 ----------------
@@ -33,16 +34,54 @@ A round's ragged ``List[ClientUpload]`` is packed into fixed-shape
   downstream) and are masked out of the similarity matrix so
   cross-task transfer never mixes in zero vectors.
 
+Wire format
+-----------
+The slot tensors ARE the uplink/downlink wire format — what the engine
+holds in memory is byte-identical to what a client transmits, so
+communication accounting is measured off the buffers rather than
+simulated:
+
+* **masks** travel bit-packed: ``uint32`` words of shape
+  ``(n_max, k_max, ceil(d/32))``, 32 mask bits per word, **LSB-first**
+  (element j of a d-length mask is bit ``j % 32`` of word ``j // 32``;
+  see ``repro.kernels.bitpack`` for the single definition).  Tail bits
+  of the last word — elements ``d .. 32*ceil(d/32)`` — are always
+  zero; producers enforce it and popcount consumers rely on it.
+* **unified / task vectors** travel bf16 (``jnp.bfloat16`` storage);
+  all round *compute* is fp32 — kernels upcast one cache/VMEM tile at
+  a time, and every sign-derived quantity (modulator mask bits, m̂,
+  similarity) plus λ num/den is computed from fp32 values *before* the
+  outgoing bf16 rounding.  Consequently packed↔bool parity is exact
+  on identical (already bf16-quantised) inputs: masks, m̂, and
+  similarity are bit-identical in every mode (per-coordinate
+  decisions, independent of tile/chunk grouping), bf16 vector outputs
+  are the bf16 rounding of the fp32 ones, and λs are bit-identical on
+  the streaming ref round (same CHUNK_D accumulation grouping as the
+  bool round).  On the Pallas paths the packed kernels tile d at 4096
+  (128 uint32 lanes) vs the bool kernels' 2048, so the λ num/den
+  partial sums group differently across tiles — λ agrees to fp32
+  accumulation tolerance (~1e-6 relative) there, not bitwise.
+* **m̂** is not part of the wire and is not materialised in fp32:
+  the engine carries the Eq. 3 agreement numerator (an exact integer
+  ≤ N_t) at one byte per coordinate and re-derives
+  m̂ = 1[α ≥ ρ] ∨ α on demand (``EngineOutput.m_hats``).
+* λ / sizes stay fp32 scalars (k per client, 32 bits each on the
+  paper's accounting).
+
+The bool/fp32 slot layout is retained behind ``pack_uploads(...,
+packed=False)`` as the A/B baseline and parity oracle
+(``benchmarks/bench_round_engine.py`` measures both).
+
 The slot layout keeps the packed footprint and the round's work at
 O(Σ k_n · d) — the same asymptotics as the legacy ragged loop — while
-the dense (N, T, d) tensors the Pallas kernels and ``matu_round``
+the dense (N, T, ·) tensors the Pallas kernels and ``matu_round``
 consume are derived on demand (``PackedRound.dense_tensors`` /
 scatter inside the kernel path).
 
-The jit cache is keyed on (shape signature, dispatch mode); the mode is
-resolved from the environment once per call (see ``ops.resolve_mode``)
-so ``REPRO_DISABLE_PALLAS`` / ``REPRO_PALLAS_INTERPRET`` A/B checks
-never collide in the cache.
+The jit cache is keyed on (shape signature, dispatch mode, d); the
+mode is resolved from the environment once per call (see
+``ops.resolve_mode``) so ``REPRO_DISABLE_PALLAS`` /
+``REPRO_PALLAS_INTERPRET`` A/B checks never collide in the cache.
 """
 
 from __future__ import annotations
@@ -57,7 +96,7 @@ import numpy as np
 
 from repro.core.aggregation import EPS_DEFAULT, KAPPA_DEFAULT, RHO_DEFAULT
 from repro.core.client import ClientDownlink, ClientUpload
-from repro.kernels import ops
+from repro.kernels import bitpack, ops
 
 
 @dataclass(frozen=True)
@@ -72,42 +111,92 @@ class EngineConfig:
 
 @dataclass
 class PackedRound:
-    """Fixed-shape slot tensors for one round + host-side metadata."""
+    """Fixed-shape slot tensors for one round + host-side metadata.
+
+    In the default wire layout ``unified`` is bf16 and ``slot_masks``
+    holds bit-packed uint32 words (``packed`` is True); the legacy
+    bool/fp32 layout (``pack_uploads(..., packed=False)``) is kept for
+    A/B benchmarks and parity tests.
+    """
     client_ids: List[int]            # actual clients, row order
     task_ids: List[List[int]]        # per client, slot order
-    unified: jax.Array               # (n_max, d) fp32
-    slot_masks: jax.Array            # (n_max, k_max, d) bool
+    unified: jax.Array               # (n_max, d) bf16 (wire) | fp32 (bool A/B)
+    slot_masks: jax.Array            # (n_max, k_max, ceil(d/32)) uint32 | (…, d) bool
     slot_lams: jax.Array             # (n_max, k_max) fp32
     slot_sizes: jax.Array            # (n_max, k_max) fp32
     slot_tasks: jax.Array            # (n_max, k_max) int32; T = invalid sentinel
     slot_valid: jax.Array            # (n_max, k_max) bool
     n_tasks: int
+    d: int                           # unpacked feature count (static)
 
     @property
     def n_clients(self) -> int:
         return len(self.client_ids)
 
+    @property
+    def packed(self) -> bool:
+        """True when the slot tensors are in the wire layout."""
+        return self.slot_masks.dtype == jnp.uint32
+
+    def wire_bits(self) -> int:
+        """Measured uplink size of the real (non-padding) slots: the
+        bits actually occupied by this round's wire buffers (bf16
+        unified + packed mask words + fp32 λ per slot).  For the bool
+        A/B layout this reports the paper's fp32+dense-bit accounting
+        (32d + k(d+32)) — the scheme those buffers implement."""
+        from repro.core.client import paper_link_bits
+        total = 0
+        for tasks in self.task_ids:
+            k = len(tasks)
+            if self.packed:
+                total += bitpack.wire_bits(
+                    self.d, k,
+                    vec_bytes_per_elem=self.unified.dtype.itemsize)
+            else:
+                total += paper_link_bits(self.d, k)
+        return total
+
     def dense_tensors(self):
         """Scatter to the dense per-task layout ``matu_round`` consumes:
-        (masks (N, T, d), lams (N, T), member (N, T), sizes (N, T)).
+        (masks (N, T, d) bool, lams (N, T), member (N, T), sizes (N, T)).
         Test/diagnostic helper — the hot path never materialises this
         on CPU.  Delegates to the single slot→dense contract in
-        :func:`repro.kernels.ops.slots_to_dense`."""
-        return ops.slots_to_dense(self.slot_masks, self.slot_lams,
+        :func:`repro.kernels.ops.slots_to_dense` (packed masks go
+        through the one sanctioned ``ops.unpack_masks`` route)."""
+        masks = (ops.unpack_masks(self.slot_masks, self.d)
+                 if self.packed else self.slot_masks)
+        return ops.slots_to_dense(masks, self.slot_lams,
                                   self.slot_sizes, self.slot_valid,
                                   self.slot_tasks, self.n_tasks)
 
 
 class EngineOutput(NamedTuple):
-    """Round results.  τ̃ is not materialised on the hot path — where
-    needed it is (2·task_vectors − tau_hats) on rows with donors."""
-    task_vectors: jax.Array          # (T, d) τ^{t,r+1}
-    tau_hats: jax.Array              # (T, d)
-    m_hats: jax.Array                # (T, d)
+    """Round results.  Neither τ̃ nor m̂ is materialised on the hot
+    path: τ̃ is (2·task_vectors − tau_hats) on rows with donors, and m̂
+    is re-derived from the exact byte-wide agreement numerator via the
+    ``m_hats`` property.  The packed path fills (alpha_num, n_held);
+    the bool A/B path fills ``m_hats_dense`` instead."""
+    task_vectors: jax.Array          # (T, d) τ^{t,r+1} fp32
+    tau_hats: jax.Array              # (T, d) fp32
     similarity: jax.Array            # (T, T), held-masked
-    down_unified: jax.Array          # (n_max, d)
-    down_masks: jax.Array            # (n_max, k_max, d) bool
+    down_unified: jax.Array          # (n_max, d) bf16 (wire) | fp32
+    down_masks: jax.Array            # (n_max, k_max, ceil(d/32)) uint32 | (…, d) bool
     down_lams: jax.Array             # (n_max, k_max)
+    alpha_num: Optional[jax.Array] = None    # (T, d) uint8 — |Σ sgn(m⊙τ)|
+    n_held: Optional[jax.Array] = None       # (T,) fp32 member counts
+    rho: float = RHO_DEFAULT
+    m_hats_dense: Optional[jax.Array] = None  # (T, d) fp32 (bool path only)
+
+    @property
+    def m_hats(self) -> jax.Array:
+        """Eq. 3 averaged task masks m̂ (T, d) fp32 — identical (bit for
+        bit) to the value the round used internally: the same fp32
+        division α = |Σ sgn| / max(N_t, 1) both passes performed."""
+        if self.m_hats_dense is not None:
+            return self.m_hats_dense
+        alpha = (self.alpha_num.astype(jnp.float32)
+                 / jnp.maximum(self.n_held, 1.0)[:, None])
+        return jnp.where(alpha >= self.rho, 1.0, alpha)
 
 
 def _round_up_pow2(n: int) -> int:
@@ -116,13 +205,20 @@ def _round_up_pow2(n: int) -> int:
 
 def pack_uploads(uploads: Sequence[ClientUpload], n_tasks: int, *,
                  n_max: Optional[int] = None,
-                 k_max: Optional[int] = None) -> PackedRound:
+                 k_max: Optional[int] = None,
+                 packed: bool = True) -> PackedRound:
     """Pack a ragged round of uploads into the engine's slot layout.
 
-    Pure data movement (numpy fills of O(Σ k_n · d) bytes, one
-    host→device transfer per tensor); all math stays inside the jitted
-    round.
+    Pure data movement (numpy fills + ``np.packbits`` of O(Σ k_n · d)
+    *bits* for the masks, one host→device transfer per tensor); all
+    math stays inside the jitted round.  ``packed=False`` selects the
+    legacy bool/fp32 layout (A/B baseline).  A client's bool masks are
+    bit-packed and its unified vector rounded to bf16 here — this IS
+    the uplink quantisation, applied once at the wire boundary.
     """
+    if not uploads:
+        raise ValueError("pack_uploads: empty round (no uploads) — "
+                         "sample at least one client or skip the round")
     n = len(uploads)
     d = int(uploads[0].unified.shape[0])
     n_max = n_max or _round_up_pow2(n)
@@ -132,11 +228,21 @@ def pack_uploads(uploads: Sequence[ClientUpload], n_tasks: int, *,
 
     # np.empty + zero only the padding: the valid region is fully
     # overwritten below, so a full np.zeros would write the big
-    # (n_max, k_max, d) buffers twice for nothing
-    unified = np.empty((n_max, d), np.float32)
+    # mask/vector buffers twice for nothing
+    # host-side bf16 fill for the wire layout (ml_dtypes ships with
+    # jax): halves the host→device transfer and skips the device cast
+    vec_dtype = np.float32
+    if packed:
+        import ml_dtypes
+        vec_dtype = ml_dtypes.bfloat16
+    unified = np.empty((n_max, d), vec_dtype)
     unified[n:] = 0.0
-    slot_masks = np.empty((n_max, k_max, d), bool)
-    slot_masks[n:] = False
+    if packed:
+        dw = bitpack.packed_width(d)
+        slot_masks = np.zeros((n_max, k_max, dw), np.uint32)
+    else:
+        slot_masks = np.empty((n_max, k_max, d), bool)
+        slot_masks[n:] = False
     slot_lams = np.zeros((n_max, k_max), np.float32)
     slot_sizes = np.zeros((n_max, k_max), np.float32)
     slot_tasks = np.full((n_max, k_max), n_tasks, np.int32)
@@ -144,20 +250,29 @@ def pack_uploads(uploads: Sequence[ClientUpload], n_tasks: int, *,
 
     for i, up in enumerate(uploads):
         k = len(up.task_ids)
-        unified[i] = np.asarray(up.unified, np.float32)
-        slot_masks[i, :k] = np.asarray(up.masks, bool)
-        slot_masks[i, k:] = False
+        unified[i] = np.asarray(up.unified)
+        m = np.asarray(up.masks)
+        if packed:
+            # accept either bool masks (legacy clients — packed here at
+            # the wire boundary) or already-packed words
+            slot_masks[i, :k] = (m if m.dtype == np.uint32
+                                 else bitpack.pack_bits_np(m))
+        else:
+            slot_masks[i, :k] = (bitpack.unpack_bits_np(m, d)
+                                 if m.dtype == np.uint32 else m)
+            slot_masks[i, k:] = False
         slot_lams[i, :k] = np.asarray(up.lams, np.float32)
         slot_sizes[i, :k] = np.asarray(up.data_sizes, np.float32)
         slot_tasks[i, :k] = up.task_ids
         slot_valid[i, :k] = True
 
+    uni = jnp.asarray(unified)                    # bf16 wire dtype if packed
     return PackedRound([u.client_id for u in uploads],
                        [list(u.task_ids) for u in uploads],
-                       jnp.asarray(unified), jnp.asarray(slot_masks),
+                       uni, jnp.asarray(slot_masks),
                        jnp.asarray(slot_lams), jnp.asarray(slot_sizes),
                        jnp.asarray(slot_tasks), jnp.asarray(slot_valid),
-                       n_tasks)
+                       n_tasks, d)
 
 
 def pack_from_slots(client_ids: List[int], task_ids: List[List[int]],
@@ -167,52 +282,69 @@ def pack_from_slots(client_ids: List[int], task_ids: List[List[int]],
                     n_tasks: int) -> PackedRound:
     """Build a PackedRound from already-batched slot tensors (the
     strategy's pre-packed upload path) — zero copies, the slot layout
-    IS the engine's native layout."""
+    IS the engine's native layout.  ``slot_masks`` may be uint32 wire
+    words (``batched_client_unify`` output) or legacy dense bool."""
+    d = int(unified.shape[-1])
     return PackedRound(client_ids, task_ids, unified, slot_masks,
                        slot_lams.astype(jnp.float32),
                        slot_sizes.astype(jnp.float32),
-                       slot_tasks.astype(jnp.int32), slot_valid, n_tasks)
+                       slot_tasks.astype(jnp.int32), slot_valid,
+                       n_tasks, d)
 
 
 def _round_impl(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
-                slot_tasks, *, cfg: EngineConfig, mode: str) -> EngineOutput:
-    """The whole server step, traced once per (shapes, mode)."""
-    out = ops.matu_round_slots(
+                slot_tasks, *, cfg: EngineConfig, mode: str, d: int):
+    """The whole server step, traced once per (shapes, mode, d).  The
+    mask dtype selects the wire-format (uint32) or bool A/B path."""
+    kw = dict(rho=cfg.rho, eps=cfg.eps, kappa=cfg.kappa,
+              cross_task=cfg.cross_task, uniform_cross=cfg.uniform_cross,
+              mode=mode)
+    if slot_masks.dtype == jnp.uint32:
+        return ops.matu_round_slots_packed(
+            unified, slot_masks, slot_lams, slot_sizes, slot_valid,
+            slot_tasks, cfg.n_tasks, d, **kw)
+    return ops.matu_round_slots(
         unified, slot_masks, slot_lams, slot_sizes, slot_valid, slot_tasks,
-        cfg.n_tasks, rho=cfg.rho, eps=cfg.eps, kappa=cfg.kappa,
-        cross_task=cfg.cross_task, uniform_cross=cfg.uniform_cross,
-        mode=mode)
-    return EngineOutput(*out)
+        cfg.n_tasks, **kw)
 
 
 class RoundEngine:
     """Stateless per-round executor; owns only jit caches (one per
-    dispatch mode — shapes are handled by jax.jit's own cache)."""
+    (dispatch mode, d) — shapes are handled by jax.jit's own cache)."""
 
     def __init__(self, cfg: EngineConfig):
         self.cfg = cfg
-        self._impls: Dict[str, object] = {}
+        self._impls: Dict[tuple, object] = {}
 
-    def _impl(self, mode: str):
-        fn = self._impls.get(mode)
+    def _impl(self, mode: str, d: int):
+        fn = self._impls.get((mode, d))
         if fn is None:
             import repro.core.engine as _mod
             fn = jax.jit(functools.partial(_mod._round_impl, cfg=self.cfg,
-                                           mode=mode))
-            self._impls[mode] = fn
+                                           mode=mode, d=d))
+            self._impls[(mode, d)] = fn
         return fn
 
     def run_packed(self, packed: PackedRound, *,
                    mode: Optional[str] = None) -> EngineOutput:
         mode = mode or ops.resolve_mode()
-        return self._impl(mode)(packed.unified, packed.slot_masks,
-                                packed.slot_lams, packed.slot_sizes,
-                                packed.slot_valid, packed.slot_tasks)
+        out = self._impl(mode, packed.d)(
+            packed.unified, packed.slot_masks, packed.slot_lams,
+            packed.slot_sizes, packed.slot_valid, packed.slot_tasks)
+        if packed.packed:
+            (tv, tau, a_num, n_held, sim, du, dm, dl) = out
+            return EngineOutput(tv, tau, sim, du, dm, dl,
+                                alpha_num=a_num, n_held=n_held,
+                                rho=self.cfg.rho)
+        (tv, tau, m_hats, sim, du, dm, dl) = out
+        return EngineOutput(tv, tau, sim, du, dm, dl,
+                            rho=self.cfg.rho, m_hats_dense=m_hats)
 
     def downlinks(self, packed: PackedRound,
                   out: EngineOutput) -> Dict[int, ClientDownlink]:
         """Slice the batched downlink tensors back to ragged per-client
-        ClientDownlinks (views, no compute)."""
+        ClientDownlinks (views, no compute).  Mask rows stay in the
+        packed wire format; clients unpack on use (``modulate``)."""
         result: Dict[int, ClientDownlink] = {}
         for i, cid in enumerate(packed.client_ids):
             k = len(packed.task_ids[i])
@@ -222,29 +354,36 @@ class RoundEngine:
         return result
 
     def round(self, uploads: Sequence[ClientUpload], *,
-              mode: Optional[str] = None
+              mode: Optional[str] = None, packed: bool = True
               ) -> Tuple[Dict[int, ClientDownlink], EngineOutput]:
         """Pack → run → unpack: the drop-in replacement for the legacy
-        per-task Python loop in ``MaTUServer.round``."""
-        packed = pack_uploads(uploads, self.cfg.n_tasks)
-        out = self.run_packed(packed, mode=mode)
-        return self.downlinks(packed, out), out
+        per-task Python loop in ``MaTUServer.round``.  ``packed=False``
+        runs the bool/fp32 A/B layout."""
+        batch = pack_uploads(uploads, self.cfg.n_tasks, packed=packed)
+        out = self.run_packed(batch, mode=mode)
+        return self.downlinks(batch, out), out
 
 
 # -- batched client-side unification ----------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _client_unify_jit(mode: str):
-    return jax.jit(functools.partial(ops.fused_unify, mode=mode))
+def _client_unify_jit(mode: str, packed: bool):
+    fn = ops.fused_unify_packed if packed else ops.fused_unify
+    return jax.jit(functools.partial(fn, mode=mode))
 
 
 def batched_client_unify(task_vectors: jax.Array, valid: jax.Array, *,
-                         mode: Optional[str] = None):
+                         mode: Optional[str] = None, packed: bool = True):
     """All clients' upload construction in one fused call.
 
     task_vectors (N, k_max, d) zero-padded stacks; valid (N, k_max).
-    Returns (unified (N, d), masks (N, k_max, d) bool, lams (N, k_max))
-    — row n equals ``unify_with_modulators(task_vectors[n, valid[n]])``.
+    By default emits the uplink wire format:
+    (unified (N, d) **bf16**, mask_words (N, k_max, ceil(d/32))
+    **uint32**, lams (N, k_max) fp32) — row n equals
+    ``unify_with_modulators(task_vectors[n, valid[n]])`` with the
+    unified vector rounded to bf16 *after* the masks/λ were derived
+    from it in fp32.  ``packed=False`` returns the legacy
+    (fp32, bool, fp32) triple.
     """
     mode = mode or ops.resolve_mode()
-    return _client_unify_jit(mode)(task_vectors, valid)
+    return _client_unify_jit(mode, packed)(task_vectors, valid)

@@ -88,8 +88,11 @@ class MaTUServer:
             for up in uploads:
                 if t in up.task_ids:
                     i = up.task_ids.index(t)
-                    rows.append(up.unified)
-                    row_masks.append(up.masks[i])
+                    # accept wire-format uploads too: dense the packed
+                    # mask words and upcast a bf16 vector so the oracle
+                    # computes in fp32 like always
+                    rows.append(jnp.asarray(up.unified, jnp.float32))
+                    row_masks.append(up.masks_dense()[i])
                     row_lams.append(up.lams[i])
                     row_sizes.append(float(up.data_sizes[i]))
             if not rows:

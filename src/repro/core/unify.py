@@ -52,7 +52,18 @@ def modulators(task_vectors: jax.Array, unified: jax.Array
 
 
 def modulate(unified: jax.Array, mask: jax.Array, lam: jax.Array) -> jax.Array:
-    """Reconstruct a task vector: τ̇^t = λ^t · m^t ⊙ τ (paper §3.2)."""
+    """Reconstruct a task vector: τ̇^t = λ^t · m^t ⊙ τ (paper §3.2).
+
+    ``mask`` may be dense bool or the bit-packed uint32 wire rows
+    (``ceil(d/32)`` words, LSB-first) a :class:`ClientDownlink` now
+    carries — packed rows are unpacked here, at the point of use, so
+    the downlink itself never holds an 8x-inflated bool tensor.  A bf16
+    wire ``unified`` is upcast so the reconstruction runs in fp32.
+    """
+    if mask.dtype == jnp.uint32:
+        from repro.kernels import bitpack
+        mask = bitpack.unpack_bits(mask, unified.shape[-1])
+    unified = unified.astype(jnp.float32)
     return lam[..., None] * jnp.where(mask, unified, 0.0) if jnp.ndim(lam) \
         else lam * jnp.where(mask, unified, 0.0)
 

@@ -18,6 +18,14 @@ itself cites as related work — DeltaMask, Tsouvalas et al. 2023):
 
 Combined uplink: 16d + k(H(p)·d + 32) bits — another ~2.3× under the
 paper's own scheme at k = 2 (see bench_table2 detail + tests).
+
+Since the wire-format engine refactor the bf16 vector and the 1-bit
+mask transport are not simulated — every MaTU round actually ships
+bf16 unified vectors and bit-packed uint32 mask words (see the
+``repro.core.engine`` wire-format contract), so the raw accounting
+(``repro.kernels.bitpack.wire_bits``, via ``ClientUpload.uplink_bits``)
+is measured off buffer sizes and the functions here quantify the
+*additional* entropy-coding headroom.
 """
 
 from __future__ import annotations
@@ -69,10 +77,23 @@ def quantize_bf16(v: jax.Array) -> Tuple[jax.Array, float]:
 
 def compressed_uplink_bits(unified: jax.Array, masks: jax.Array,
                            *, use_entropy_bound: bool = False) -> int:
-    """Total uplink bits for one client under the compressed scheme."""
+    """Total uplink bits for one client under the compressed scheme.
+
+    Since the wire-format refactor the vector term is *measured* from
+    the actual transport buffer (bf16 → 16d bits; a legacy fp32 vector
+    is still accounted at the 16d bf16 transport it would use), and
+    ``masks`` may arrive either as dense bool rows or as the bit-packed
+    uint32 wire words the engine natively ships (unpacked here only to
+    evaluate the entropy coder, via the repo-wide bit convention).
+    """
     d = int(unified.shape[0])
-    total = 16 * d                                 # bf16 unified vector
+    # 16d either way: measured for a bf16 wire upload, the simulated
+    # bf16 transport bound for a legacy fp32 vector
+    total = 16 * d
     m = np.asarray(masks)
+    if m.dtype == np.uint32:
+        from repro.kernels.bitpack import unpack_bits_np
+        m = unpack_bits_np(m, d)
     if m.ndim == 1:
         m = m[None]
     for row in m:
@@ -80,3 +101,9 @@ def compressed_uplink_bits(unified: jax.Array, masks: jax.Array,
                 else golomb_encode_bits(row))
         total += int(math.ceil(bits)) + 32         # + fp32 scaler
     return total
+
+
+# Raw (uncoded) wire accounting lives in repro.kernels.bitpack.wire_bits
+# — the single definition ClientUpload.uplink_bits / ClientDownlink
+# .downlink_bits / PackedRound.wire_bits all delegate to.  This module
+# only quantifies the entropy-coding headroom on top of it.

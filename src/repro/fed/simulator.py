@@ -41,6 +41,9 @@ class History:
     task_acc: List[Dict[int, float]] = field(default_factory=list)
     mean_acc: List[float] = field(default_factory=list)
     uplink_bits_per_round: List[int] = field(default_factory=list)
+    # measured off the actual downlink wire buffers (bf16 vectors +
+    # bit-packed mask words) where the strategy has them; 0 otherwise
+    downlink_bits_per_round: List[int] = field(default_factory=list)
 
     @property
     def final_task_acc(self) -> Dict[int, float]:
@@ -149,6 +152,8 @@ class FedSimulator:
                 hist.task_acc.append(acc)
                 hist.mean_acc.append(float(np.mean(list(acc.values()))))
                 hist.uplink_bits_per_round.append(bits)
+                hist.downlink_bits_per_round.append(
+                    self.strategy.downlink_bits())
                 if verbose:
                     print(f"[{self.strategy.name}] round {r+1:3d} "
                           f"mean_acc={hist.mean_acc[-1]:.3f} bits={bits:,}")

@@ -133,6 +133,11 @@ class Strategy:
         # default: one adapter per task per client (fp32)
         return sum(FLOAT_BITS * self.d * len(u.task_ids) for u in uploads)
 
+    def downlink_bits(self) -> int:
+        """Measured downlink wire bits of the last round (0 where the
+        strategy has no explicit downlink tensors)."""
+        return 0
+
 
 # ---------------------------------------------------------------------------
 class MaTUStrategy(Strategy):
@@ -163,22 +168,21 @@ class MaTUStrategy(Strategy):
 
     def aggregate_batch(self, batch: RoundBatch) -> None:
         """Fully batched round: ONE fused kernel call unifies every
-        client's upload, one scatter packs the round, and the engine
-        runs Eq. 3–7 + downlink re-unification in a single jitted step.
-        The per-client Python loop the legacy path ran (unify, stack,
-        dict updates) is reduced to slicing views off batch tensors."""
-        unified, masks, lams = batched_client_unify(batch.task_vectors,
-                                                    batch.valid)
-        if self.compress:
-            from repro.fed.compression import quantize_bf16_transport
-            unified = quantize_bf16_transport(unified)   # batched round-trip
+        client's upload straight into the wire format (bf16 unified
+        vectors + bit-packed uint32 mask words), one scatter packs the
+        round, and the engine runs Eq. 3–7 + downlink re-unification in
+        a single jitted step over the packed tensors — the uplink is
+        byte-identical to what the engine computes on, so communication
+        accounting is measured off these buffers, not simulated."""
+        unified, mask_words, lams = batched_client_unify(batch.task_vectors,
+                                                         batch.valid)
         packed = pack_from_slots(batch.client_ids, batch.task_ids, unified,
-                                 masks, lams, batch.slot_tasks, batch.valid,
-                                 batch.slot_sizes, self.n_tasks)
+                                 mask_words, lams, batch.slot_tasks,
+                                 batch.valid, batch.slot_sizes, self.n_tasks)
         self.downlinks.update(self.server.round_packed(packed))
         self._last_uploads = [
             ClientUpload(u.client_id, list(u.task_ids), unified[i],
-                         masks[i, :len(u.task_ids)],
+                         mask_words[i, :len(u.task_ids)],
                          lams[i, :len(u.task_ids)], list(u.data_sizes))
             for i, u in enumerate(batch.uploads)
         ]
@@ -189,13 +193,29 @@ class MaTUStrategy(Strategy):
         return [self.server.last_task_vectors[task_id]]
 
     def uplink_bits(self, uploads: List[Upload]) -> int:
-        if self.compress and self._last_uploads:
-            from repro.fed.compression import compressed_uplink_bits
-            return sum(compressed_uplink_bits(u.unified, u.masks)
-                       for u in self._last_uploads)
+        if self._last_uploads:
+            if self.compress:
+                # entropy-coded masks on top of the measured bf16 vector
+                from repro.fed.compression import compressed_uplink_bits
+                return sum(compressed_uplink_bits(u.unified, u.masks)
+                           for u in self._last_uploads)
+            # measured: the bits of the actual wire buffers
+            # (bf16 vector + packed mask words + fp32 scalers)
+            return sum(u.uplink_bits() for u in self._last_uploads)
+        # paper accounting fallback (no wire buffers built yet):
         # ONE unified fp32 vector + per task (binary mask + scalar)
-        return sum(FLOAT_BITS * self.d + len(u.task_ids) * (self.d + FLOAT_BITS)
+        from repro.core.client import paper_link_bits
+        return sum(paper_link_bits(self.d, len(u.task_ids), FLOAT_BITS)
                    for u in uploads)
+
+    def downlink_bits(self) -> int:
+        """Measured downlink wire bits of the LAST round only: the
+        ``downlinks`` dict is the persistent per-client state cache
+        (``task_init`` needs every client ever served), so sum just the
+        clients actually served this round."""
+        return sum(self.downlinks[u.client_id].downlink_bits()
+                   for u in self._last_uploads
+                   if u.client_id in self.downlinks)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,152 @@
+"""Bit-packed mask wire format: the single definition of the layout.
+
+Binary modulator masks are the round's largest tensors — at
+``(n_max, k_max, d)`` a bool layout spends 8 bits per mask bit and is
+the reason the CPU round is memory-bound.  The wire format packs every
+32 mask bits into one ``uint32`` word:
+
+* element ``j`` of a d-length mask lives in word ``j // 32``,
+  bit ``j % 32``, **LSB-first** (``(word >> (j % 32)) & 1``);
+* a d-length mask occupies ``packed_width(d) = ceil(d / 32)`` words;
+* tail bits of the last word (elements ``d .. 32*ceil(d/32)``) are
+  always zero — packing enforces it, consumers may rely on it (popcount
+  over whole words needs no tail correction).
+
+The same convention is produced by the host-side numpy packer
+(``pack_bits_np``: ``np.packbits(bitorder="little")`` + little-endian
+``uint32`` view), the jnp packer used inside jitted rounds, and the
+in-kernel Pallas packers — so packed tensors are byte-identical across
+the client → uplink → engine → downlink path.
+
+Sign bit-planes: a ternary sign vector ``sgn(x) ∈ {-1, 0, +1}`` packs
+into two planes, ``pos = pack(x > 0)`` and ``nz = pos | pack(x < 0)``.
+The Eq. 5 sign dot becomes pure popcount algebra (see
+``packed_sign_dots``), and Eq. 3 sign election becomes bitwise ANDs
+against the mask words.
+"""
+
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+
+# (1, 32) uint32 bit-index row, broadcast against (..., n_words, 1)
+_BITS = np.arange(WORD_BITS, dtype=np.uint32)
+
+
+def packed_width(d: int) -> int:
+    """Words per d-length mask: ceil(d / 32)."""
+    return -(-d // WORD_BITS)
+
+
+def wire_bits(d: int, k: int, *, vec_bytes_per_elem: int = 2,
+              float_bits: int = 32) -> int:
+    """Measured wire size of one client's packed upload/downlink: the
+    vector buffer (bf16 by default) + ``k`` packed mask rows + one
+    scaler per row.  THE single accounting for the packed wire format —
+    client/engine/compression all delegate here."""
+    return (8 * vec_bytes_per_elem * d
+            + k * (8 * 4 * packed_width(d) + float_bits))
+
+
+def pack_bits(mask: jax.Array) -> jax.Array:
+    """(..., d) bool/{0,1} -> (..., ceil(d/32)) uint32, LSB-first.
+
+    Tail bits beyond d are zero.  Pure jnp — used inside jitted rounds
+    and as the "ref" dispatch of ``ops.pack_masks``.
+    """
+    d = mask.shape[-1]
+    pad = (-d) % WORD_BITS
+    bits = mask.astype(jnp.uint32)
+    if pad:
+        bits = jnp.pad(bits, [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+    bits = bits.reshape(bits.shape[:-1] + (-1, WORD_BITS))
+    return jnp.sum(bits << jnp.asarray(_BITS), axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, d: int, dtype=jnp.bool_) -> jax.Array:
+    """(..., w) uint32 -> (..., d) of ``dtype`` (bool by default).
+
+    ``d`` may be any length ≤ 32*w; trailing packed bits are dropped.
+    """
+    bits = (words[..., None] >> jnp.asarray(_BITS)) & jnp.uint32(1)
+    flat = bits.reshape(bits.shape[:-2] + (-1,))
+    return flat[..., :d].astype(dtype)
+
+
+def pack_bits_np(mask: np.ndarray) -> np.ndarray:
+    """Host-side packer (same layout as :func:`pack_bits`), via the C
+    fast path ``np.packbits(bitorder='little')`` + a little-endian
+    uint32 view."""
+    mask = np.asarray(mask, bool)
+    d = mask.shape[-1]
+    pad = (-d) % WORD_BITS
+    if pad:
+        mask = np.concatenate(
+            [mask, np.zeros(mask.shape[:-1] + (pad,), bool)], axis=-1)
+    packed_u8 = np.packbits(mask, axis=-1, bitorder="little")
+    words = np.ascontiguousarray(packed_u8).view(np.dtype("<u4"))
+    if sys.byteorder != "little":          # normalise storage on BE hosts
+        words = words.astype(np.uint32)
+    return words
+
+
+def unpack_bits_np(words: np.ndarray, d: int) -> np.ndarray:
+    """Host-side inverse of :func:`pack_bits_np` -> (..., d) bool."""
+    words = np.asarray(words).astype("<u4", copy=False)
+    u8 = words.view(np.uint8)
+    bits = np.unpackbits(u8, axis=-1, bitorder="little")
+    return bits[..., :d].astype(bool)
+
+
+def unpack_tile(words: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """(R, W) uint32 -> (R, W*32) tile unpack for Pallas kernel bodies:
+    uses ``broadcasted_iota`` (TPU needs ≥2-D iota) and no tail slicing
+    — kernel tiles are always word-aligned."""
+    r, w = words.shape
+    iota = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, WORD_BITS), 2)
+    bits = (words[:, :, None] >> iota) & jnp.uint32(1)
+    return bits.reshape(r, w * WORD_BITS).astype(dtype)
+
+
+def pack_tile(bits: jax.Array) -> jax.Array:
+    """(R, D) bool/{0,1} -> (R, D/32) uint32 tile pack for Pallas kernel
+    bodies (D must be a multiple of 32)."""
+    r, dd = bits.shape
+    iota = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, WORD_BITS), 2)
+    b = bits.reshape(r, dd // WORD_BITS, WORD_BITS).astype(jnp.uint32)
+    return jnp.sum(b << iota, axis=-1, dtype=jnp.uint32)
+
+
+def sign_planes(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Pack ``sgn(x)`` over the last axis into (pos, nz) bit-planes:
+    ``pos`` has bit j set iff x_j > 0, ``nz`` iff x_j != 0."""
+    pos = pack_bits(x > 0)
+    neg = pack_bits(x < 0)
+    return pos, pos | neg
+
+
+def packed_sign_dots(pos: jax.Array, nz: jax.Array) -> jax.Array:
+    """Pairwise sign dots Σ_j sgn(x_t)_j · sgn(x_t')_j from (T, w)
+    bit-planes, as popcount algebra — exactly the integer the fp32
+    ``sgn(X) @ sgn(X).T`` matmul produces (both are exact for d < 2²⁴):
+
+        both  = nz_t & nz_t'                  (coords where neither is 0)
+        agree = both & ~(pos_t ^ pos_t')      (equal sign bits)
+        dot   = popcnt(agree) - popcnt(both & (pos ^ pos'))
+              = popcnt(both) - 2·popcnt(both & (pos ^ pos'))
+
+    Returns (T, T) int32.
+    """
+    both = nz[:, None, :] & nz[None, :, :]
+    diff = both & (pos[:, None, :] ^ pos[None, :, :])
+    n_both = jnp.sum(jax.lax.population_count(both), axis=-1,
+                     dtype=jnp.int32)
+    n_diff = jnp.sum(jax.lax.population_count(diff), axis=-1,
+                     dtype=jnp.int32)
+    return n_both - 2 * n_diff

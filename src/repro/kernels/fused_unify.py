@@ -29,7 +29,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import bitpack
+
 BLOCK_D = 2048
+BLOCK_D_PACKED = 4096       # 128 uint32 words per tile (one lane tile)
 
 
 def _fused_unify_kernel(tv_ref, valid_ref, uni_ref, mask_ref, num_ref, den_ref):
@@ -91,3 +94,77 @@ def fused_unify_pallas(task_vectors: jax.Array, valid: jax.Array, *,
         interpret=interpret,
     )(task_vectors, valid.astype(jnp.float32))
     return unified[:, :d], masks[:, :, :d], num, den
+
+
+def _fused_unify_packed_kernel(tv_ref, valid_ref, uni_ref, mask_ref,
+                               num_ref, den_ref):
+    x = tv_ref[0].astype(jnp.float32)               # (K, BD)
+    v = valid_ref[0].astype(jnp.float32)            # (K,)
+    xm = x * v[:, None]
+    sigma = jnp.sign(jnp.sum(xm, axis=0))
+    aligned = (xm * sigma[None, :]) > 0.0
+    mu = jnp.max(jnp.where(aligned, jnp.abs(xm), 0.0), axis=0)
+    tau = sigma * mu
+    # mask bits decided on the fp32 tau BEFORE the bf16 rounding of the
+    # emitted unified vector — bit-identical to the bool/fp32 kernel
+    uni_ref[0] = tau.astype(uni_ref.dtype)
+    mask = ((x * tau[None, :]) > 0.0).astype(jnp.float32) * v[:, None]
+    mask_ref[0] = bitpack.pack_tile(mask)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        num_ref[...] = jnp.zeros_like(num_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+
+    num_ref[0] += jnp.sum(jnp.abs(xm), axis=1)
+    den_ref[0] += jnp.sum(mask * jnp.abs(tau)[None, :], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def fused_unify_packed_pallas(task_vectors: jax.Array, valid: jax.Array, *,
+                              block_d: int = BLOCK_D_PACKED,
+                              interpret: bool = True):
+    """Wire-format variant of :func:`fused_unify_pallas`: consumes bf16
+    (or fp32) slot stacks and emits the wire tensors directly — bf16
+    unified vectors and bit-packed uint32 mask words, packed 32 lanes
+    per word inside the kernel so the (B, K, d) mask never exists in
+    HBM at more than 1 bit per element.
+
+    Returns (unified (B, d) bf16, mask_words (B, K, ceil(d/32)) uint32,
+    num (B, K), den (B, K)); λ = num / max(den, eps) is left to the
+    caller.  Compute is fp32 per tile; mask bits and num/den are derived
+    from the fp32 values before the bf16 rounding — masks are
+    bit-identical to the bool kernel's, while num/den accumulate over
+    4096-wide tiles (vs the bool kernel's 2048) so they match to fp32
+    accumulation tolerance, not bitwise, for d > 2048.
+    """
+    b, k, d = task_vectors.shape
+    pad = (-d) % block_d
+    if pad:
+        task_vectors = jnp.pad(task_vectors, ((0, 0), (0, 0), (0, pad)))
+    dp = d + pad
+    bw = block_d // 32
+    unified, mask_words, num, den = pl.pallas_call(
+        _fused_unify_packed_kernel,
+        grid=(b, dp // block_d),
+        in_specs=[
+            pl.BlockSpec((1, k, block_d), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_d), lambda i, j: (i, j)),
+            pl.BlockSpec((1, k, bw), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, dp), jnp.bfloat16),
+            jax.ShapeDtypeStruct((b, k, dp // 32), jnp.uint32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(task_vectors, valid.astype(jnp.float32))
+    return (unified[:, :d], mask_words[:, :, :bitpack.packed_width(d)],
+            num, den)
+

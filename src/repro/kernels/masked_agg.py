@@ -23,7 +23,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import bitpack
+
 BLOCK_D = 2048
+# packed kernels tile 32 mask bits per word: 4096 elements = 128 words,
+# exactly one uint32 lane tile
+BLOCK_D_PACKED = 4096
 
 
 def _masked_agg_kernel(u_ref, m_ref, lam_ref, gam_ref, tau_ref, mhat_ref, *, rho):
@@ -105,6 +110,92 @@ def masked_agg_batched_pallas(unified: jax.Array, masks: jax.Array,
     )(unified, masks.astype(unified.dtype), lams.astype(jnp.float32),
       gammas.astype(jnp.float32), members.astype(jnp.float32))
     return tau[:, :d], m_hat[:, :d]
+
+
+def _masked_agg_batched_packed_kernel(u_ref, pos_ref, neg_ref, mw_ref,
+                                      lam_ref, gam_ref, mem_ref,
+                                      tau_ref, anum_ref, *, rho):
+    u = u_ref[...].astype(jnp.float32)              # (N, BD)
+    w = mw_ref[:, 0, :]                             # (N, BW) uint32
+    lam = lam_ref[:, 0].astype(jnp.float32)         # (N,)
+    gam = gam_ref[:, 0].astype(jnp.float32)
+    mem = mem_ref[:, 0].astype(jnp.float32)
+    n_t = jnp.maximum(jnp.sum(mem), 1.0)
+    # sgn(m ⊙ τ_n) via word-wide ANDs against τ_n's sign bit-planes
+    # (packed ONCE per d-block outside the kernel — every task row of
+    # the grid reuses them): bit(m & pos) − bit(m & neg); the merge
+    # reuses the same planes — m ⊙ τ = τ·(bit(m&pos) + bit(m&neg))
+    # exactly (τ = 0 contributes 0)
+    sp = bitpack.unpack_tile(w & pos_ref[...])      # (N, BD) f32 {0,1}
+    sn = bitpack.unpack_tile(w & neg_ref[...])
+    a_num = jnp.abs(jnp.sum(mem[:, None] * (sp - sn), axis=0))
+    m_hat = jnp.where(a_num / n_t >= rho, 1.0, a_num / n_t)
+    weighted = jnp.sum((gam * lam)[:, None] * (u * (sp + sn)), axis=0)
+    tau_ref[0, :] = (weighted * m_hat).astype(tau_ref.dtype)
+    anum_ref[0, :] = a_num.astype(anum_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "block_d", "interpret"))
+def masked_agg_batched_packed_pallas(unified: jax.Array, mask_words: jax.Array,
+                                     lams: jax.Array, gammas: jax.Array,
+                                     members: jax.Array, *, rho: float = 0.4,
+                                     block_d: int = BLOCK_D_PACKED,
+                                     interpret: bool = True):
+    """Wire-format twin of :func:`masked_agg_batched_pallas`: the
+    (N, T, d) mask tensor arrives as bit-packed uint32 words
+    (N, T, ceil(d/32)) and is expanded 32-bits-per-word inside VMEM —
+    HBM mask traffic drops 8x vs the bool layout and 32x vs fp32.
+    ``unified`` may be bf16 (the uplink wire dtype); each tile is upcast
+    to fp32 in VMEM.
+
+    Instead of m̂ this kernel emits the Eq. 3 agreement *numerator*
+    |Σ_n sgn(m_n ⊙ τ_n)| — an exact small integer (≤ N) from which the
+    caller re-derives m̂ = 1[α ≥ ρ] ∨ α with the identical fp32 division
+    (and can store it at one byte per coordinate).
+    Returns (tau_hats (T, d) fp32, alpha_num (T, d) fp32).
+    """
+    n, d = unified.shape
+    t = mask_words.shape[1]
+    pad = (-d) % block_d
+    dp = d + pad
+    dwp = dp // 32
+    if pad:
+        unified = jnp.pad(unified, ((0, 0), (0, pad)))
+    if mask_words.shape[2] != dwp:
+        mask_words = jnp.pad(
+            mask_words, ((0, 0), (0, 0), (0, dwp - mask_words.shape[2])))
+    bw = block_d // 32
+    # τ_n's sign bit-planes are task-independent: pack them once here
+    # (tiny (N, dwp) words) instead of once per task row in-kernel.
+    # The comparisons run on the wire dtype directly — bf16 > 0 decides
+    # exactly like its fp32 upcast, so no dense fp32 copy is made.
+    pos_w = bitpack.pack_bits(unified > 0.0)
+    neg_w = bitpack.pack_bits(unified < 0.0)
+    kernel = functools.partial(_masked_agg_batched_packed_kernel, rho=rho)
+    tau, anum = pl.pallas_call(
+        kernel,
+        grid=(t, dp // block_d),
+        in_specs=[
+            pl.BlockSpec((n, block_d), lambda i, j: (0, j)),
+            pl.BlockSpec((n, bw), lambda i, j: (0, j)),
+            pl.BlockSpec((n, bw), lambda i, j: (0, j)),
+            pl.BlockSpec((n, 1, bw), lambda i, j: (0, i, j)),
+            pl.BlockSpec((n, 1), lambda i, j: (0, i)),
+            pl.BlockSpec((n, 1), lambda i, j: (0, i)),
+            pl.BlockSpec((n, 1), lambda i, j: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_d), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_d), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, dp), jnp.float32),
+            jax.ShapeDtypeStruct((t, dp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(unified, pos_w, neg_w, mask_words, lams.astype(jnp.float32),
+      gammas.astype(jnp.float32), members.astype(jnp.float32))
+    return tau[:, :d], anum[:, :d]
 
 
 @functools.partial(jax.jit, static_argnames=("rho", "block_d", "interpret"))

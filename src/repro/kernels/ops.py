@@ -31,10 +31,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
-from repro.kernels.fused_unify import fused_unify_pallas
-from repro.kernels.masked_agg import masked_agg_batched_pallas, masked_agg_pallas
-from repro.kernels.sign_sim import sign_sim_pallas
+from repro.kernels import bitpack, ref
+from repro.kernels.fused_unify import (fused_unify_packed_pallas,
+                                       fused_unify_pallas)
+from repro.kernels.masked_agg import (masked_agg_batched_packed_pallas,
+                                      masked_agg_batched_pallas,
+                                      masked_agg_pallas)
+from repro.kernels.sign_sim import sign_sim_packed_pallas, sign_sim_pallas
 from repro.kernels.unify import unify_pallas
 
 MODES = ("pallas", "pallas_interpret", "ref")
@@ -117,6 +120,84 @@ def fused_unify(task_vectors: jax.Array, valid: jax.Array, *,
     return unified, masks, lams
 
 
+def pack_masks(masks: jax.Array, *, mode: Optional[str] = None) -> jax.Array:
+    """(..., d) bool -> (..., ceil(d/32)) uint32, LSB-first — THE wire
+    layout (see ``repro.kernels.bitpack`` for the bit convention).
+    Identical in every dispatch mode: packing is pure elementwise bit
+    algebra, already optimal under XLA."""
+    _norm(mode)
+    return bitpack.pack_bits(masks)
+
+
+def unpack_masks(words: jax.Array, d: int, *,
+                 mode: Optional[str] = None) -> jax.Array:
+    """Inverse of :func:`pack_masks` — the ONLY sanctioned route back to
+    dense bool masks.  Test/diagnostic helper: the round path computes
+    on packed words directly and never calls this."""
+    _norm(mode)
+    return bitpack.unpack_bits(words, d)
+
+
+def fused_unify_packed(task_vectors: jax.Array, valid: jax.Array, *,
+                       eps: float = 1e-12, mode: Optional[str] = None):
+    """Wire-format :func:`fused_unify`: same math, but emits the uplink
+    tensors — bf16 unified vectors and bit-packed mask words.
+
+    task_vectors (B, K, d) fp32/bf16; valid (B, K) bool.  Returns
+    (unified (B, d) bf16, mask_words (B, K, ceil(d/32)) uint32,
+    lams (B, K) fp32).  Mask bits and λ are decided on fp32 values
+    before the bf16 rounding; masks are bit-identical to
+    :func:`fused_unify` on the same inputs in every mode, λ is
+    bit-identical on the "ref" path (same chunking) and matches to
+    fp32 accumulation tolerance on the Pallas paths (different tile
+    width).
+    """
+    mode = _norm(mode)
+    if mode == "ref":
+        uni, words, num, den = ref.fused_unify_packed_ref(task_vectors, valid)
+    else:
+        uni, words, num, den = fused_unify_packed_pallas(
+            task_vectors, valid, interpret=(mode == "pallas_interpret"))
+    lams = num / jnp.maximum(den, eps)
+    return uni, words, lams
+
+
+def masked_agg_batched_packed(unified, mask_words, lams, gammas, members,
+                              d: int, *, rho: float = 0.4,
+                              mode: Optional[str] = None):
+    """Whole-round Eq. 3 + Eq. 4 over packed (N, T, ceil(d/32)) mask
+    words (+ bf16-capable unified).  Returns (tau_hats, alpha_num) —
+    m̂ is derivable as ``where(alpha_num/max(N_t,1) >= rho, 1, ·)``.
+    The "ref" dispatch unpacks and delegates to the bool oracle
+    (validation path); the Pallas modes expand words in VMEM only."""
+    mode = _norm(mode)
+    if mode == "ref":
+        masks = bitpack.unpack_bits(mask_words, d, jnp.float32)
+        tau, m_hat = ref.masked_agg_batched_ref(
+            unified.astype(jnp.float32), masks, lams, gammas, members, rho)
+        memf = members.astype(jnp.float32)
+        sign_u = jnp.sign(unified.astype(jnp.float32))
+        a_num = jnp.abs(jnp.einsum("nt,ntd->td", memf,
+                                   masks * sign_u[:, None, :]))
+        return tau, a_num
+    return masked_agg_batched_packed_pallas(
+        unified, mask_words, lams, gammas, members, rho=rho,
+        interpret=(mode == "pallas_interpret"))
+
+
+def sign_sim_packed(pos: jax.Array, nz: jax.Array, d: int, *,
+                    mode: Optional[str] = None) -> jax.Array:
+    """Eq. 5 similarity from packed sign bit-planes (popcount form);
+    ``d`` is the unpacked feature count for the 1/d normalisation."""
+    mode = _norm(mode)
+    if mode == "ref":
+        dots = bitpack.packed_sign_dots(pos, nz).astype(jnp.float32)
+    else:
+        dots = sign_sim_packed_pallas(
+            pos, nz, interpret=(mode == "pallas_interpret"))
+    return 0.5 * (dots / d + 1.0)
+
+
 def topk_weights(sim: jax.Array, *, eps: float = 0.5, kappa: int = 3,
                  mode: Optional[str] = None) -> jax.Array:
     """Eq. 6 top-κ neighbourhood weights (XLA-optimal at (T, T) scale)."""
@@ -131,6 +212,21 @@ def cross_task_combine(tau_hats: jax.Array, m_hats: jax.Array,
     return ref.cross_task_combine_ref(tau_hats, m_hats, sim_weights)
 
 
+def _slot_scalars_to_dense(slot_lams, slot_sizes, slot_valid, slot_tasks,
+                           n_tasks: int):
+    """Scatter the per-slot scalars to the dense (N, T) layout (shared
+    by the bool and packed slot→dense contracts)."""
+    n = slot_lams.shape[0]
+    rows = jnp.arange(n)[:, None]
+    lams_d = jnp.zeros((n, n_tasks), jnp.float32).at[rows, slot_tasks].set(
+        jnp.where(slot_valid, slot_lams, 0.0), mode="drop")
+    member_d = jnp.zeros((n, n_tasks), bool).at[rows, slot_tasks].set(
+        slot_valid, mode="drop")
+    sizes_d = jnp.zeros((n, n_tasks), jnp.float32).at[rows, slot_tasks].set(
+        jnp.where(slot_valid, slot_sizes, 0.0), mode="drop")
+    return lams_d, member_d, sizes_d
+
+
 def slots_to_dense(slot_masks, slot_lams, slot_sizes, slot_valid, slot_tasks,
                    n_tasks: int):
     """Scatter slot-packed round tensors to the dense per-task layout
@@ -142,13 +238,24 @@ def slots_to_dense(slot_masks, slot_lams, slot_sizes, slot_valid, slot_tasks,
     rows = jnp.arange(n)[:, None]
     masks_d = jnp.zeros((n, n_tasks, d), bool).at[rows, slot_tasks].set(
         jnp.where(slot_valid[:, :, None], slot_masks, False), mode="drop")
-    lams_d = jnp.zeros((n, n_tasks), jnp.float32).at[rows, slot_tasks].set(
-        jnp.where(slot_valid, slot_lams, 0.0), mode="drop")
-    member_d = jnp.zeros((n, n_tasks), bool).at[rows, slot_tasks].set(
-        slot_valid, mode="drop")
-    sizes_d = jnp.zeros((n, n_tasks), jnp.float32).at[rows, slot_tasks].set(
-        jnp.where(slot_valid, slot_sizes, 0.0), mode="drop")
+    lams_d, member_d, sizes_d = _slot_scalars_to_dense(
+        slot_lams, slot_sizes, slot_valid, slot_tasks, n_tasks)
     return masks_d, lams_d, member_d, sizes_d
+
+
+def slots_to_dense_packed(slot_mask_words, slot_lams, slot_sizes, slot_valid,
+                          slot_tasks, n_tasks: int):
+    """Packed twin of :func:`slots_to_dense`: the mask scatter moves
+    uint32 words, 8x less data than the bool layout."""
+    n, k, dw = slot_mask_words.shape
+    rows = jnp.arange(n)[:, None]
+    words_d = jnp.zeros((n, n_tasks, dw), jnp.uint32).at[
+        rows, slot_tasks].set(
+        jnp.where(slot_valid[:, :, None], slot_mask_words, jnp.uint32(0)),
+        mode="drop")
+    lams_d, member_d, sizes_d = _slot_scalars_to_dense(
+        slot_lams, slot_sizes, slot_valid, slot_tasks, n_tasks)
+    return words_d, lams_d, member_d, sizes_d
 
 
 def _round_slots_dense(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
@@ -214,3 +321,85 @@ def matu_round_slots(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
     down_lams = num / jnp.maximum(den, lam_eps)
     return (task_vectors, tau_hats, m_hats, sim,
             down_unified, down_masks, down_lams)
+
+
+def _round_slots_dense_packed(unified, slot_mask_words, slot_lams, slot_sizes,
+                              slot_valid, slot_tasks, n_tasks, d, *, rho, eps,
+                              kappa, cross_task, uniform_cross, mode):
+    """Packed kernel-path round: scatter the uint32 mask words to the
+    dense (N, T, d/32) layout, then compose the packed batched
+    masked-agg, popcount sign-sim, and packed fused-unify kernels.  The
+    mask tensor stays 1 bit/element in HBM end to end; words are
+    expanded to lanes only inside VMEM tiles."""
+    words_d, lams_d, member_d, sizes_d = slots_to_dense_packed(
+        slot_mask_words, slot_lams, slot_sizes, slot_valid, slot_tasks,
+        n_tasks)
+
+    memf = member_d.astype(jnp.float32)
+    gam = sizes_d * memf
+    gam = gam / jnp.maximum(jnp.sum(gam, axis=0, keepdims=True), 1e-12)
+    interp = (mode == "pallas_interpret")
+    tau_hats, a_num = masked_agg_batched_packed_pallas(
+        unified, words_d, lams_d, gam, member_d, rho=rho, interpret=interp)
+    n_t = jnp.sum(memf, axis=0)
+    held = n_t > 0
+    heldf = held.astype(jnp.float32)
+    alpha = a_num / jnp.maximum(n_t, 1.0)[:, None]
+    m_hats = jnp.where(alpha >= rho, 1.0, alpha)
+
+    pos, nz = bitpack.sign_planes(tau_hats)
+    dots = sign_sim_packed_pallas(pos, nz, interpret=interp)
+    sim = 0.5 * (dots / d + 1.0) * heldf[None, :] * heldf[:, None]
+    weights = ref.cross_weights_ref(sim, held, eps=eps, kappa=kappa,
+                                    cross_task=cross_task,
+                                    uniform_cross=uniform_cross)
+    task_vectors, _tau_tildes = ref.cross_task_combine_ref(tau_hats, m_hats,
+                                                           weights)
+    # sentinel slot ids are clamped; the valid mask zeroes their output
+    tvs_slots = jnp.take(task_vectors, slot_tasks, axis=0, mode="clip")
+    uni, dwords, num, den = fused_unify_packed_pallas(
+        tvs_slots, slot_valid, interpret=interp)
+    a_u8 = a_num.astype(ref.alpha_dtype(slot_valid.shape[0]))
+    return (task_vectors, tau_hats, a_u8, n_t, sim, uni, dwords, num, den)
+
+
+def matu_round_slots_packed(unified, slot_mask_words, slot_lams, slot_sizes,
+                            slot_valid, slot_tasks, n_tasks: int, d: int, *,
+                            rho: float = 0.4, eps: float = 0.5,
+                            kappa: int = 3, cross_task: bool = True,
+                            uniform_cross: bool = False,
+                            lam_eps: float = 1e-12,
+                            mode: Optional[str] = None):
+    """The full MaTU server round over wire-format slot uploads — the
+    default entry point of :class:`repro.core.engine.RoundEngine`.
+
+    Layout: ``unified`` (N, d) bf16 (fp32 tolerated), ``slot_mask_words``
+    (N, K, ceil(d/32)) uint32 bit-packed masks (LSB-first, zero tail
+    bits — see ``repro.kernels.bitpack``); scalars as in
+    :func:`matu_round_slots`.  ``d`` is static (the word axis cannot
+    express it).
+
+    "ref" runs the two-pass cache-blocked packed streaming round; the
+    Pallas modes scatter words to the dense packed layout and compose
+    the packed kernels.  Returns (task_vectors fp32, tau_hats fp32,
+    alpha_num uint8, n_held, similarity, down_unified bf16,
+    down_mask_words uint32, down_lams) — m̂ is re-derivable from
+    (alpha_num, n_held, ρ) and never materialised in fp32 on the hot
+    path; τ̃ as before is (2τ − τ̂) on rows with donors.
+    """
+    mode = _norm(mode)
+    kw = dict(rho=rho, eps=eps, kappa=kappa, cross_task=cross_task,
+              uniform_cross=uniform_cross)
+    if mode == "ref":
+        out = ref.matu_round_slots_packed_ref(
+            unified, slot_mask_words, slot_lams, slot_sizes, slot_valid,
+            slot_tasks, n_tasks, d, **kw)
+    else:
+        out = _round_slots_dense_packed(
+            unified, slot_mask_words, slot_lams, slot_sizes, slot_valid,
+            slot_tasks, n_tasks, d, mode=mode, **kw)
+    (task_vectors, tau_hats, alpha_num, n_held, sim,
+     down_unified, down_mask_words, num, den) = out
+    down_lams = num / jnp.maximum(den, lam_eps)
+    return (task_vectors, tau_hats, alpha_num, n_held, sim,
+            down_unified, down_mask_words, down_lams)

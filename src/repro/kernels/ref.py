@@ -9,6 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import bitpack
+
 
 def unify_ref(task_vectors: jax.Array) -> jax.Array:
     """(K, d) -> (d,): sign election + max-|.| magnitude (Eq. 2)."""
@@ -143,6 +145,242 @@ def fused_unify_ref(task_vectors: jax.Array, valid: jax.Array, *,
         (jnp.zeros((b, dp), jnp.float32), jnp.zeros((b, k, dp), bool),
          jnp.zeros((b, k), jnp.float32), jnp.zeros((b, k), jnp.float32)))
     return uni[:, :d], msk[:, :, :d], num, den
+
+
+def fused_unify_packed_ref(task_vectors: jax.Array, valid: jax.Array, *,
+                           chunk: int = CHUNK_D):
+    """Wire-format variant of :func:`fused_unify_ref`: consumes bf16 (or
+    fp32) slot-packed task vectors and emits the uplink wire tensors —
+    bf16 unified vectors and bit-packed uint32 mask words.
+
+    task_vectors (B, K, d) bf16/fp32; valid (B, K) bool.  All compute is
+    fp32 per cache-sized d-chunk (inputs are upcast tile-by-tile, never
+    as a whole), mask bits are decided on the fp32 values BEFORE the
+    unified vector is rounded to bf16, and λ num/den stay fp32 — so the
+    modulators are bit-identical to the bool/fp32 path on the same
+    inputs.  Returns (unified (B, d) bf16, mask_words (B, K, ceil(d/32))
+    uint32, num (B, K), den (B, K)).
+    """
+    b, k, d = task_vectors.shape
+    chunk, dp = _chunked(d, chunk)
+    dwc, dwp = chunk // 32, dp // 32
+    x_p = task_vectors
+    if dp != d:
+        x_p = jnp.pad(x_p, ((0, 0), (0, 0), (0, dp - d)))
+    vf = valid.astype(jnp.float32)
+
+    # the unified carry stays fp32 inside the loop — a bf16 carry
+    # defeats XLA's in-place buffer aliasing on CPU (each iteration
+    # copies the whole buffer); the wire rounding is one streaming
+    # cast after the loop
+    def step(c, carry):
+        uni, msk, num, den = carry
+        off = c * chunk
+        x = jax.lax.dynamic_slice_in_dim(x_p, off, chunk, axis=2)
+        tau, mask, num_c, den_c = _unify_block(x.astype(jnp.float32), vf)
+        words = bitpack.pack_bits(mask)
+        uni = jax.lax.dynamic_update_slice_in_dim(uni, tau, off, axis=1)
+        msk = jax.lax.dynamic_update_slice_in_dim(msk, words, c * dwc, axis=2)
+        return uni, msk, num + num_c, den + den_c
+
+    uni, msk, num, den = jax.lax.fori_loop(
+        0, dp // chunk, step,
+        (jnp.zeros((b, dp), jnp.float32),
+         jnp.zeros((b, k, dwp), jnp.uint32),
+         jnp.zeros((b, k), jnp.float32), jnp.zeros((b, k), jnp.float32)))
+    return (uni[:, :d].astype(jnp.bfloat16),
+            msk[:, :, :bitpack.packed_width(d)], num, den)
+
+
+def alpha_dtype(n: int):
+    """Narrowest dtype holding the Eq. 3 agreement numerator
+    |Σ_n sgn(m ⊙ τ_n)| ≤ N_t ≤ n (an exact small integer)."""
+    return jnp.uint8 if n <= 255 else jnp.int32
+
+
+def matu_round_slots_packed_ref(unified: jax.Array, slot_mask_words: jax.Array,
+                                slot_lams: jax.Array, slot_sizes: jax.Array,
+                                slot_valid: jax.Array, slot_tasks: jax.Array,
+                                n_tasks: int, d: int, *, rho: float,
+                                eps: float, kappa: int,
+                                cross_task: bool = True,
+                                uniform_cross: bool = False,
+                                chunk: int = CHUNK_D):
+    """Wire-format twin of :func:`matu_round_slots_ref`: the same
+    two-pass cache-blocked streaming round, but every big tensor stays
+    in its transport layout end to end —
+
+    * ``unified`` (N, d) arrives bf16 and is upcast fp32 one chunk at a
+      time (never materialised dense);
+    * ``slot_mask_words`` (N, K, ceil(d/32)) uint32 packed masks; the
+      Eq. 3 sign election runs on bitwise ANDs of mask words against the
+      sign bit-planes of τ_n, and only the two AND products are expanded
+      to fp32 (the mask itself is never unpacked separately: the merge
+      selector m·[τ≠0] is their sum, exact because τ=0 contributes 0);
+    * Eq. 5 sign dots accumulate by popcount over the packed sign
+      planes of τ̂ (exact integers — identical to the fp32 matmul);
+    * m̂ is never materialised: pass 1 stores the agreement numerator
+      |Σ sgn| as one byte per coordinate (exact; see ``alpha_dtype``)
+      and pass 2 re-derives m̂ = 1[α ≥ ρ] ∨ α with the identical fp32
+      division, so both passes see bit-identical values;
+    * the downlink re-unification emits bf16 unified vectors and packed
+      mask words — the downlink wire format — with mask bits and λ
+      num/den decided on fp32 values before the bf16 rounding.
+
+    Apart from transport rounding of the *inputs/outputs*, every fp32
+    op runs in the same order as the bool/fp32 round, so on identical
+    (already-quantised) inputs the masks and λs match bit for bit.
+
+    Returns (task_vectors (T, d) fp32, tau_hats (T, d) fp32,
+    alpha_num (T, d) uint8, n_t (T,) fp32, similarity (T, T),
+    down_unified (N, d) bf16, down_mask_words (N, K, ceil(d/32)),
+    down_num (N, K), down_den (N, K)).
+    """
+    n, k, dw_in = slot_mask_words.shape
+    m_rows = n * k
+    chunk, dp = _chunked(d, chunk)
+    dwc, dwp = chunk // 32, dp // 32
+    n_seg = n_tasks + 1
+    a_dt = alpha_dtype(n)
+
+    ids = slot_tasks.reshape(m_rows)
+    vf = slot_valid.reshape(m_rows).astype(jnp.float32)
+    sizes = slot_sizes.reshape(m_rows).astype(jnp.float32) * vf
+    totals = jax.ops.segment_sum(sizes, ids, num_segments=n_seg)
+    gam = sizes / jnp.maximum(totals[ids], 1e-12)
+    glv = gam * slot_lams.reshape(m_rows).astype(jnp.float32) * vf
+    n_t = jax.ops.segment_sum(vf, ids, num_segments=n_seg)[:n_tasks]
+    held = n_t > 0
+
+    u_p = unified                       # stays bf16; upcast per chunk
+    m_w = slot_mask_words
+    if dp != d:
+        u_p = jnp.pad(u_p, ((0, 0), (0, dp - d)))
+    if dwp != dw_in:
+        m_w = jnp.pad(m_w, ((0, 0), (0, 0), (0, dwp - dw_in)))
+
+    glv_nk = glv.reshape(n, k)
+    n_t_max = jnp.maximum(n_t, 1.0)
+
+    # ---- pass 1: Eq. 3 + 4 per chunk, Eq. 5 popcount dots ----------------
+    # one unpack per chunk (to int8 — the sign election is pure small-
+    # integer algebra: int8 bits × int8 signs, exact) feeds both the
+    # Eq. 3 election and the Eq. 4 merge; the packed words never exist
+    # in fp32 outside this cache-resident block.  The fp32 merge keeps
+    # the single whole-round segment-sum so its accumulation order is
+    # identical to the bool layout's (bit-parity); the sign sum is
+    # integer-exact under any order.
+    def pass1(c, carry):
+        tau_buf, anum_buf, dots = carry
+        off = c * chunk
+        uc = jax.lax.dynamic_slice_in_dim(u_p, off, chunk,
+                                          axis=1).astype(jnp.float32)
+        mw = jax.lax.dynamic_slice_in_dim(m_w, c * dwc, dwc, axis=2)
+        mi8 = bitpack.unpack_bits(mw, chunk, jnp.int8)         # (N, K, dc)
+        signs = (mi8 * jnp.sign(uc).astype(jnp.int8)[:, None, :])
+        a_num = jax.ops.segment_sum(
+            signs.reshape(m_rows, chunk).astype(jnp.int32), ids,
+            num_segments=n_seg)[:n_tasks].astype(jnp.float32)
+        recon = mi8.astype(jnp.float32) * (glv_nk[:, :, None]
+                                           * uc[:, None, :])
+        tau_pre = jax.ops.segment_sum(recon.reshape(m_rows, chunk), ids,
+                                      num_segments=n_seg)[:n_tasks]
+        a_abs = jnp.abs(a_num)
+        alpha = a_abs / n_t_max[:, None]
+        m_hat = jnp.where(alpha >= rho, 1.0, alpha)
+        tau = tau_pre * m_hat
+        pos_t, nz_t = bitpack.sign_planes(tau)
+        dots = dots + bitpack.packed_sign_dots(pos_t, nz_t)
+        tau_buf = jax.lax.dynamic_update_slice_in_dim(tau_buf, tau, off,
+                                                      axis=1)
+        anum_buf = jax.lax.dynamic_update_slice_in_dim(
+            anum_buf, a_abs.astype(a_dt), off, axis=1)
+        return tau_buf, anum_buf, dots
+
+    tau_hats, anum_buf, dots = jax.lax.fori_loop(
+        0, dp // chunk, pass1,
+        (jnp.zeros((n_tasks, dp), jnp.float32),
+         jnp.zeros((n_tasks, dp), a_dt),
+         jnp.zeros((n_tasks, n_tasks), jnp.int32)))
+
+    heldf = held.astype(jnp.float32)
+    sim = 0.5 * (dots.astype(jnp.float32) / d + 1.0) \
+        * heldf[None, :] * heldf[:, None]
+    weights = cross_weights_ref(sim, held, eps=eps, kappa=kappa,
+                                cross_task=cross_task,
+                                uniform_cross=uniform_cross)
+    total_w = jnp.sum(weights, axis=1, keepdims=True)
+    norm_w = weights / jnp.maximum(total_w, 1e-12)
+    has = (total_w > 0).astype(jnp.float32)
+
+    c1 = (1.0 / (1.0 + has))
+    c2 = (has / (1.0 + has))
+    ids_nk = ids.reshape(n, k)
+
+    # ---- pass 2: Eq. 6 + 7 per chunk, downlink re-unify while hot --------
+    # m̂ is re-derived from the byte-wide agreement numerator with the
+    # same fp32 division pass 1 used — bit-identical, 4x less traffic.
+    # Invalid slots gather the appended all-zero sentinel row (ids ==
+    # n_tasks), which zeroes them exactly as the bool path's validity
+    # multiplies did — no per-element vf masking anywhere in the block.
+    def pass2(c, carry):
+        tv_buf, uni_buf, dmask_buf, num_t, den = carry
+        off = c * chunk
+        tau = jax.lax.dynamic_slice_in_dim(tau_hats, off, chunk, axis=1)
+        anum = jax.lax.dynamic_slice_in_dim(anum_buf, off, chunk, axis=1)
+        alpha = anum.astype(jnp.float32) / n_t_max[:, None]
+        m_hat = jnp.where(alpha >= rho, 1.0, alpha)
+        tv = c1 * tau + c2 * (m_hat * (norm_w @ tau))
+        num_t = num_t + jnp.sum(jnp.abs(tv), axis=1)
+        tv_ext = jnp.concatenate([tv, jnp.zeros((1, chunk), jnp.float32)], 0)
+        # the (N, K, dc) slot expansion is never materialised in fp32:
+        # the σ election fuses the gather into its reduce, and each
+        # slot re-gathers from the cache-resident (T+1, dc) chunk.
+        # Sign agreement is decided by sign algebra, not fp products —
+        # aligned ⟺ x·σ > 0 exactly, and relu(x·σ) = |x| on aligned
+        # coords exactly (σ = ±1) — so per-slot work stays in L2-sized
+        # (N, dc) tiles.  x·τ_n > 0 ⟺ aligned ∧ μ > 0 (exact up to
+        # fp32 underflow of the x·τ product, where the algebraic sign
+        # is used); on the mask |τ_n| = |σ|·μ = μ exactly, so the λ
+        # denominator sums μ directly.
+        x = jnp.take(tv_ext, ids, axis=0).reshape(n, k, chunk)
+        sigma = jnp.sign(jnp.sum(x, axis=1))                   # (N, dc)
+        posm = sigma > 0
+        negm = sigma < 0
+        als = []
+        mu = jnp.zeros((n, chunk), jnp.float32)
+        for kk in range(k):
+            x_k = jnp.take(tv_ext, ids_nk[:, kk], axis=0)      # (N, dc)
+            al_k = ((x_k > 0) & posm) | ((x_k < 0) & negm)
+            mu = jnp.maximum(mu, jnp.where(al_k, jnp.abs(x_k), 0.0))
+            als.append(al_k)
+        tau_n = sigma * mu
+        mupos = mu[:, None, :] > 0
+        dmask = jnp.stack(als, axis=1) & mupos     # zero slots: never set
+        den_c = jnp.sum(jnp.where(dmask, mu[:, None, :], 0.0), axis=2)
+        tv_buf = jax.lax.dynamic_update_slice_in_dim(tv_buf, tv, off, axis=1)
+        # fp32 carry (see fused_unify_packed_ref): the bf16 wire
+        # rounding happens in one streaming cast after the loop
+        uni_buf = jax.lax.dynamic_update_slice_in_dim(uni_buf, tau_n, off,
+                                                      axis=1)
+        dmask_buf = jax.lax.dynamic_update_slice_in_dim(
+            dmask_buf, bitpack.pack_bits(dmask), c * dwc, axis=2)
+        return tv_buf, uni_buf, dmask_buf, num_t, den + den_c
+
+    tv_buf, uni_buf, dmask_buf, num_t, den = jax.lax.fori_loop(
+        0, dp // chunk, pass2,
+        (jnp.zeros((n_tasks, dp), jnp.float32),
+         jnp.zeros((n, dp), jnp.float32),
+         jnp.zeros((n, k, dwp), jnp.uint32),
+         jnp.zeros((n_tasks,), jnp.float32),
+         jnp.zeros((n, k), jnp.float32)))
+    num = jnp.concatenate([num_t, jnp.zeros((1,),
+                                            jnp.float32)])[ids].reshape(n, k)
+
+    dw = bitpack.packed_width(d)
+    return (tv_buf[:, :d], tau_hats[:, :d], anum_buf[:, :d], n_t, sim,
+            uni_buf[:, :d].astype(jnp.bfloat16), dmask_buf[:, :, :dw],
+            num, den)
 
 
 def cross_weights_ref(sim: jax.Array, held: jax.Array, *, eps: float,

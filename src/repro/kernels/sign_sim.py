@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BLOCK_D = 2048
+BLOCK_W = 512           # uint32 words per grid step of the packed kernel
 
 
 def _sign_sim_kernel(x_ref, acc_ref):
@@ -51,3 +52,48 @@ def sign_sim_pallas(tau_hats: jax.Array, *, block_d: int = BLOCK_D,
         interpret=interpret,
     )(tau_hats)
     return 0.5 * (dots / d + 1.0)
+
+
+def _sign_sim_packed_kernel(pos_ref, nz_ref, acc_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # the popcount identity lives in ONE place (bitpack) — the kernel
+    # tile is exactly the (T, BW) shape the helper operates on
+    from repro.kernels import bitpack
+    dots = bitpack.packed_sign_dots(pos_ref[...], nz_ref[...])
+    acc_ref[...] += dots.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def sign_sim_packed_pallas(pos: jax.Array, nz: jax.Array, *,
+                           block_w: int = BLOCK_W,
+                           interpret: bool = True) -> jax.Array:
+    """Eq. 5 sign dots from packed sign bit-planes (the wire-format
+    form of :func:`sign_sim_pallas`): ``pos``/``nz`` are (T, w) uint32
+    planes with bit j set iff τ̂_j > 0 / τ̂_j ≠ 0 (see
+    ``repro.kernels.bitpack.sign_planes``).
+
+    Per word the dot contribution is pure popcount algebra —
+    popcnt(both) − 2·popcnt(both & (pos ⊕ pos')) — an exact integer
+    identical to the fp32 sgn·sgnᵀ matmul, at 1/32 the element count.
+    Zero padding of the planes contributes nothing.  Returns the raw
+    (T, T) dots in fp32; the caller normalises by the *unpacked* d:
+    S = ½(dots/d + 1).
+    """
+    t, w = pos.shape
+    pad = (-w) % block_w
+    if pad:
+        pos = jnp.pad(pos, ((0, 0), (0, pad)))
+        nz = jnp.pad(nz, ((0, 0), (0, pad)))
+    wp = w + pad
+    return pl.pallas_call(
+        _sign_sim_packed_kernel,
+        grid=(wp // block_w,),
+        in_specs=[pl.BlockSpec((t, block_w), lambda i: (0, i)),
+                  pl.BlockSpec((t, block_w), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((t, t), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, t), jnp.float32),
+        interpret=interpret,
+    )(pos, nz)

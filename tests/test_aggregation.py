@@ -131,12 +131,16 @@ def test_server_round_stateless_and_complete():
     for up in ups:
         dl = down[up.client_id]
         assert dl.unified.shape == (d,)
-        assert dl.masks.shape == (len(up.task_ids), d)
+        # the downlink travels in the wire format: packed mask words
+        assert dl.masks.shape == (len(up.task_ids), -(-d // 32))
+        assert dl.masks.dtype == jnp.uint32
+        assert dl.masks_dense().shape == (len(up.task_ids), d)
         assert dl.lams.shape == (len(up.task_ids),)
     # stateless: a second identical round gives identical output
     server2 = MaTUServer(MaTUServerConfig(n_tasks=n_tasks))
     down2 = server2.round(ups)
-    np.testing.assert_allclose(down[0].unified, down2[0].unified)
+    np.testing.assert_allclose(np.asarray(down[0].unified, np.float32),
+                               np.asarray(down2[0].unified, np.float32))
 
 
 def test_uplink_bits_scale_with_one_vector():

@@ -104,11 +104,16 @@ def test_generate_sampling_respects_top_k():
 
 
 def test_compressed_matu_strategy_accuracy_parity():
-    """compress=True must match vanilla MaTU accuracy at ≥1.5× fewer bits."""
+    """Since the wire-format refactor every MaTU round ships bf16
+    vectors + bit-packed masks; ``compress=True`` only swaps the mask
+    accounting for the entropy-coded bound.  Accuracy must be identical
+    (same wire either way), the measured wire must beat the paper's
+    fp32+dense-bit scheme by ≥1.5x, and the entropy-coded accounting
+    can only improve on the raw packed wire."""
     from repro.data.dirichlet import dirichlet_split
     from repro.data.synthetic import make_constellation
     from repro.fed.simulator import FedConfig, FedSimulator
-    from repro.fed.strategies import MaTUStrategy
+    from repro.fed.strategies import FLOAT_BITS, MaTUStrategy
     from repro.fed.testbed import MLPBackbone
 
     con = make_constellation(n_tasks=4, n_groups=2, feat_dim=24, n_classes=6,
@@ -121,6 +126,11 @@ def test_compressed_matu_strategy_accuracy_parity():
     for comp in (False, True):
         strat = MaTUStrategy(4, bb.d, compress=comp)
         h = FedSimulator(cfg, con, split, bb, strat).run()
-        res[comp] = (h.final_mean_acc, h.mean_uplink_bits)
-    assert abs(res[True][0] - res[False][0]) < 0.05   # accuracy parity
-    assert res[True][1] < res[False][1] / 1.5          # >=1.5x fewer bits
+        res[comp] = (h.final_mean_acc, h.mean_uplink_bits,
+                     h.downlink_bits_per_round[-1])
+    assert res[True][0] == res[False][0]               # identical wire
+    # paper scheme for the same round shape: 32d + k(d+32) per client
+    paper = (FLOAT_BITS * bb.d + 2 * (bb.d + FLOAT_BITS)) * 6
+    assert res[False][1] < paper / 1.5                 # measured wire wins
+    assert res[True][1] <= res[False][1]               # entropy ≤ raw packed
+    assert res[False][2] > 0                           # measured downlink

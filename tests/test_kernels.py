@@ -19,10 +19,12 @@ try:
 except ImportError:
     HAVE_HYPOTHESIS = False
 
-from repro.kernels import ref
-from repro.kernels.fused_unify import fused_unify_pallas
-from repro.kernels.masked_agg import masked_agg_batched_pallas, masked_agg_pallas
-from repro.kernels.sign_sim import sign_sim_pallas
+from repro.kernels import bitpack, ref
+from repro.kernels.fused_unify import (fused_unify_packed_pallas,
+                                       fused_unify_pallas)
+from repro.kernels.masked_agg import (masked_agg_batched_pallas,
+                                      masked_agg_pallas)
+from repro.kernels.sign_sim import sign_sim_packed_pallas, sign_sim_pallas
 from repro.kernels.unify import unify_pallas
 
 jax.config.update("jax_platform_name", "cpu")
@@ -120,6 +122,123 @@ def test_fused_unify_sweep(b, k, d):
     np.testing.assert_array_equal(np.asarray(m_k > 0.5), np.asarray(m_r))
     np.testing.assert_allclose(num_k, num_r, rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(den_k, den_r, rtol=1e-5, atol=1e-6)
+
+
+# -- packed (wire-format) kernels ------------------------------------------
+
+@pytest.mark.parametrize("n,t,d", [(3, 2, 100), (5, 4, 4096), (8, 6, 3333)])
+def test_masked_agg_batched_packed_matches_bool(n, t, d):
+    """Packed-mask kernel ≡ bool kernel: same τ̂, and m̂ re-derived from
+    the emitted agreement numerator matches bit for bit."""
+    key = jax.random.PRNGKey(n * 13 + t * 7 + d)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    u = jax.random.normal(k1, (n, d), jnp.float32)
+    member = jax.random.uniform(k2, (n, t)) > 0.4
+    m = ((jax.random.uniform(k3, (n, t, d)) > 0.5)
+         & member[:, :, None])
+    lam = jax.random.uniform(k4, (n, t)) + 0.5
+    sizes = jnp.where(member, 50.0, 0.0)
+    gam = sizes / jnp.maximum(jnp.sum(sizes, 0, keepdims=True), 1e-12)
+
+    from repro.kernels import ops
+
+    words = bitpack.pack_bits(m)
+    # both dispatch modes of the packed op, through the ops contract
+    tau_p, anum = ops.masked_agg_batched_packed(
+        u.astype(jnp.bfloat16), words, lam, gam, member, d, rho=0.4,
+        mode="pallas_interpret")
+    tau_r, anum_r = ops.masked_agg_batched_packed(
+        u.astype(jnp.bfloat16), words, lam, gam, member, d, rho=0.4,
+        mode="ref")
+    np.testing.assert_allclose(tau_p, tau_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(anum), np.asarray(anum_r))
+    # the bool comparator consumes the identical bf16-quantised values
+    tau_b, mh_b = masked_agg_batched_pallas(
+        u.astype(jnp.bfloat16).astype(jnp.float32), m.astype(jnp.float32),
+        lam, gam, member, rho=0.4, interpret=True)
+    np.testing.assert_allclose(tau_p, tau_b, rtol=1e-5, atol=1e-6)
+    n_t = jnp.maximum(jnp.sum(member.astype(jnp.float32), 0), 1.0)
+    alpha = anum / n_t[:, None]
+    mh_p = jnp.where(alpha >= 0.4, 1.0, alpha)
+    np.testing.assert_array_equal(np.asarray(mh_p), np.asarray(mh_b))
+    # the numerator is an exact integer ≤ N_t
+    a = np.asarray(anum)
+    np.testing.assert_array_equal(a, np.round(a))
+    assert (a <= np.asarray(n_t)[:, None]).all()
+
+
+@pytest.mark.parametrize("b,k,d", [(2, 1, 64), (4, 3, 2048), (6, 4, 5000)])
+def test_fused_unify_packed_matches_bool(b, k, d):
+    """Packed fused unify emits exactly pack(bool masks) and
+    bf16(fp32 unified) of the bool kernel, with identical num/den."""
+    key = jax.random.PRNGKey(b * 31 + k * 17 + d)
+    k1, k2 = jax.random.split(key)
+    valid = jax.random.uniform(k1, (b, k)) > 0.3
+    valid = valid.at[:, 0].set(True)
+    tvs = jax.random.normal(k2, (b, k, d), jnp.float32)
+    tvs = jnp.where(valid[:, :, None], tvs, 0.0)
+
+    u_p, words, num_p, den_p = fused_unify_packed_pallas(tvs, valid,
+                                                         interpret=True)
+    u_b, m_b, num_b, den_b = fused_unify_pallas(tvs, valid, interpret=True)
+    assert u_p.dtype == jnp.bfloat16 and words.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(u_b.astype(jnp.bfloat16)),
+                                  np.asarray(u_p))
+    np.testing.assert_array_equal(np.asarray(bitpack.pack_bits(m_b > 0.5)),
+                                  np.asarray(words))
+    np.testing.assert_allclose(num_p, num_b, rtol=1e-6)
+    np.testing.assert_allclose(den_p, den_b, rtol=1e-6)
+    # ref packed oracle agrees too
+    u_r, w_r, num_r, den_r = ref.fused_unify_packed_ref(tvs, valid)
+    np.testing.assert_array_equal(np.asarray(u_r), np.asarray(u_p))
+    np.testing.assert_array_equal(np.asarray(w_r), np.asarray(words))
+
+
+@pytest.mark.parametrize("t,d", [(2, 50), (8, 4096), (16, 2048), (30, 10000)])
+def test_sign_sim_packed_matches_dense(t, d):
+    """Popcount sign-sim on bit-planes == the fp32 sgn·sgnᵀ matmul —
+    exact integers, so equality is bitwise."""
+    key = jax.random.PRNGKey(t + d)
+    x = jax.random.normal(key, (t, d), jnp.float32)
+    x = jnp.where(jnp.abs(x) < 0.05, 0.0, x)     # exercise sgn = 0
+    pos, nz = bitpack.sign_planes(x)
+    dots = sign_sim_packed_pallas(pos, nz, interpret=True)
+    want = jnp.sign(x) @ jnp.sign(x).T
+    np.testing.assert_array_equal(np.asarray(dots), np.asarray(want))
+    # and via the dispatch op, normalised: ≡ sign_sim_ref
+    from repro.kernels import ops
+    sim = ops.sign_sim_packed(pos, nz, d, mode="pallas_interpret")
+    np.testing.assert_allclose(sim, ref.sign_sim_ref(x), rtol=1e-6)
+    sim_ref = ops.sign_sim_packed(pos, nz, d, mode="ref")
+    np.testing.assert_allclose(sim_ref, ref.sign_sim_ref(x), rtol=1e-6)
+
+
+@pytest.mark.parametrize("d", [100, 250, 4096])
+def test_packed_kernel_tail_bits_zero(d):
+    """Packed kernel outputs honour the wire convention: tail bits of
+    the last mask word are zero for ragged d."""
+    key = jax.random.PRNGKey(d)
+    tvs = jax.random.normal(key, (2, 3, d), jnp.float32)
+    valid = jnp.ones((2, 3), bool)
+    _, words, _, _ = fused_unify_packed_pallas(tvs, valid, interpret=True)
+    tail = bitpack.packed_width(d) * 32 - d
+    if tail:
+        np.testing.assert_array_equal(
+            np.asarray(words[..., -1] >> jnp.uint32(32 - tail)), 0)
+
+
+if HAVE_HYPOTHESIS:
+    @hypothesis.given(
+        hnp.arrays(np.bool_, hnp.array_shapes(min_dims=2, max_dims=2,
+                                              min_side=1, max_side=80)))
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def test_bitpack_roundtrip_property(mask):
+        d = mask.shape[-1]
+        w = bitpack.pack_bits(jnp.asarray(mask))
+        np.testing.assert_array_equal(np.asarray(bitpack.unpack_bits(w, d)),
+                                      mask)
+        np.testing.assert_array_equal(np.asarray(w),
+                                      bitpack.pack_bits_np(mask))
 
 
 def test_sign_sim_padding_invariance():

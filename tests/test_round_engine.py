@@ -1,11 +1,17 @@
 """Round-engine parity tests: the batched, kernel-dispatched engine
 (repro.core.engine) against the legacy per-task Python-loop server, the
-dense matu_round reference, and across kernel dispatch modes.
+dense matu_round reference, and across kernel dispatch modes — plus the
+wire-format guarantees of the bit-packed / bf16 slot layout.
 
-The legacy path (``MaTUServer.round_legacy``) is kept in-tree exactly
-for these tests: the engine must reproduce it to fp tolerance on
-randomized ragged uploads — varying client count, ragged k_n, and
-partial task participation.
+The wire contract under test (see the engine docstring):
+
+* uploads are quantised ONCE at the wire boundary — unified vectors to
+  bf16, masks to uint32 words — and every path (legacy loop, bool A/B
+  engine, packed engine) then consumes the identical values;
+* on those identical inputs the packed engine's masks and λs are
+  **bit-identical** to the bool/fp32 layout's (sign decisions are made
+  on fp32 values before any bf16 rounding), and its bf16 vector
+  outputs are exactly the bf16 rounding of the bool engine's fp32 ones.
 """
 
 import numpy as np
@@ -14,20 +20,27 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import matu_round
+from repro.core.aggregation import matu_round, matu_round_packed
 from repro.core.client import ClientUpload
 from repro.core.engine import (EngineConfig, RoundEngine,
                                batched_client_unify, pack_uploads)
 from repro.core.server import MaTUServer, MaTUServerConfig
 from repro.core.unify import unify_with_modulators
-from repro.kernels import ops
+from repro.fed.compression import quantize_bf16_transport
+from repro.kernels import bitpack, ops
 
 jax.config.update("jax_platform_name", "cpu")
 
 
+def bf16(x):
+    return jnp.asarray(x, jnp.float32).astype(jnp.bfloat16)
+
+
 def random_uploads(rng, n, n_tasks, d, k_max, *, skew_sizes=True):
     """Ragged random round: each client holds 1..k_max distinct tasks.
-    With n small vs n_tasks some tasks go unheld (partial participation)."""
+    With n small vs n_tasks some tasks go unheld (partial participation).
+    Unified vectors carry the bf16 wire quantisation (applied once, as
+    the uplink does) so every server path consumes identical values."""
     ups = []
     for cid in range(n):
         k = int(rng.integers(1, k_max + 1))
@@ -36,34 +49,44 @@ def random_uploads(rng, n, n_tasks, d, k_max, *, skew_sizes=True):
         unified, masks, lams = unify_with_modulators(tvs)
         sizes = (rng.integers(10, 200, size=k).tolist() if skew_sizes
                  else [100] * k)
-        ups.append(ClientUpload(cid, tasks, unified, masks, lams, sizes))
+        ups.append(ClientUpload(cid, tasks, quantize_bf16_transport(unified),
+                                masks, lams, sizes))
     return ups
 
 
 def assert_round_equal(server_a, server_b, downs_a, downs_b, uploads,
                        rtol=1e-5, atol=1e-6):
+    """a = fp32 reference (legacy), b = engine (wire outputs)."""
     np.testing.assert_allclose(server_a.last_task_vectors,
                                server_b.last_task_vectors, rtol=rtol, atol=atol)
     np.testing.assert_allclose(server_a.last_similarity,
                                server_b.last_similarity, rtol=rtol, atol=atol)
     for up in uploads:
         a, b = downs_a[up.client_id], downs_b[up.client_id]
-        assert b.masks.shape == (len(up.task_ids), int(up.unified.shape[0]))
-        np.testing.assert_allclose(a.unified, b.unified, rtol=rtol, atol=atol)
-        np.testing.assert_array_equal(np.asarray(a.masks), np.asarray(b.masks))
+        d = int(up.unified.shape[0])
+        assert b.masks.dtype == jnp.uint32           # wire layout
+        assert b.masks.shape == (len(up.task_ids), bitpack.packed_width(d))
+        assert b.unified.dtype == jnp.bfloat16
+        # mask bits are decided on fp32 values pre-rounding: bit-identical
+        np.testing.assert_array_equal(np.asarray(a.masks),
+                                      np.asarray(b.masks_dense()))
+        # the bf16 wire vector is the rounding of the fp32 reference
+        np.testing.assert_allclose(np.asarray(a.unified),
+                                   np.asarray(b.unified, np.float32),
+                                   rtol=1e-2, atol=1e-5)
         np.testing.assert_allclose(a.lams, b.lams, rtol=1e-4, atol=atol)
 
 
 @pytest.mark.parametrize("seed,n,n_tasks,d,k_max", [
     (0, 4, 5, 128, 3),       # partial participation likely
-    (1, 7, 6, 300, 3),
+    (1, 7, 6, 300, 3),       # d not divisible by 32 (ragged tail words)
     (2, 3, 8, 64, 2),        # heavy partial participation
     (3, 12, 5, 200, 4),      # more clients than tasks
     (4, 1, 4, 96, 2),        # single-client round
 ])
 def test_engine_matches_legacy_server(seed, n, n_tasks, d, k_max):
-    """(a) engine output ≡ legacy MaTUServer.round on randomized ragged
-    uploads: task vectors, similarity, and every client's downlink."""
+    """(a) wire-format engine ≡ legacy MaTUServer.round on randomized
+    ragged uploads: task vectors, similarity, every client's downlink."""
     rng = np.random.default_rng(seed)
     ups = random_uploads(rng, n, n_tasks, d, k_max)
     legacy = MaTUServer(MaTUServerConfig(n_tasks=n_tasks))
@@ -88,14 +111,135 @@ def test_engine_matches_legacy_ablations(cross_task, uniform_cross):
     assert_round_equal(legacy, batched, downs_l, downs_e, ups)
 
 
+def test_packed_engine_bit_identical_to_bool_engine():
+    """THE wire-format parity guarantee (streaming ref round — the CPU
+    default): on identical (bf16-quantised) inputs the packed engine's
+    masks are bit-identical to the bool/fp32 engine's, fp32 outputs
+    match exactly, and each bf16 output is exactly the bf16 rounding of
+    the bool engine's fp32 value.  (On the Pallas paths masks/m̂/sim
+    stay bit-identical but λ matches only to fp32 accumulation
+    tolerance — the packed kernels tile d at 4096 vs 2048; see the
+    engine docstring.)"""
+    for seed, (n, n_tasks, d, k_max) in enumerate(
+            [(5, 4, 300, 3), (8, 6, 1000, 3), (3, 5, 97, 2)]):
+        ups = random_uploads(np.random.default_rng(seed), n, n_tasks, d, k_max)
+        eng = RoundEngine(EngineConfig(n_tasks=n_tasks))
+        downs_p, out_p = eng.round(ups)                      # wire layout
+        downs_b, out_b = eng.round(ups, packed=False)        # bool A/B layout
+        np.testing.assert_array_equal(np.asarray(out_b.task_vectors),
+                                      np.asarray(out_p.task_vectors))
+        np.testing.assert_array_equal(np.asarray(out_b.tau_hats),
+                                      np.asarray(out_p.tau_hats))
+        np.testing.assert_array_equal(np.asarray(out_b.similarity),
+                                      np.asarray(out_p.similarity))
+        # m̂ re-derived from the byte-wide agreement numerator is the
+        # bit-identical value the bool path materialised in fp32
+        np.testing.assert_array_equal(np.asarray(out_b.m_hats),
+                                      np.asarray(out_p.m_hats))
+        np.testing.assert_array_equal(np.asarray(out_b.down_lams),
+                                      np.asarray(out_p.down_lams))
+        np.testing.assert_array_equal(
+            np.asarray(out_b.down_masks),
+            np.asarray(ops.unpack_masks(out_p.down_masks, d)))
+        np.testing.assert_array_equal(
+            np.asarray(bf16(out_b.down_unified)),
+            np.asarray(out_p.down_unified))
+        for cid in downs_p:
+            np.testing.assert_array_equal(
+                np.asarray(downs_b[cid].masks),
+                np.asarray(downs_p[cid].masks_dense()))
+
+
+def test_pack_unpack_roundtrip_ragged():
+    """ops.unpack_masks(pack_masks(m)) == m for d not divisible by 32,
+    and tail bits of the last word are zero (the wire convention)."""
+    rng = np.random.default_rng(2)
+    for d in (1, 7, 31, 32, 33, 100, 257, 4096, 8191):
+        m = jnp.asarray(rng.random((3, 2, d)) > 0.5)
+        w = ops.pack_masks(m)
+        assert w.dtype == jnp.uint32
+        assert w.shape == (3, 2, bitpack.packed_width(d))
+        np.testing.assert_array_equal(np.asarray(ops.unpack_masks(w, d)),
+                                      np.asarray(m))
+        tail = bitpack.packed_width(d) * 32 - d
+        if tail:
+            np.testing.assert_array_equal(
+                np.asarray(w[..., -1] >> jnp.uint32(32 - tail)), 0)
+        # host-side packer produces the identical bytes
+        np.testing.assert_array_equal(np.asarray(w),
+                                      bitpack.pack_bits_np(np.asarray(m)))
+
+
+try:
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @hypothesis.given(
+        hnp.arrays(np.bool_, hnp.array_shapes(min_dims=1, max_dims=3,
+                                              min_side=1, max_side=70)))
+    @hypothesis.settings(max_examples=40, deadline=None)
+    def test_pack_unpack_roundtrip_property(mask):
+        d = mask.shape[-1]
+        w = ops.pack_masks(jnp.asarray(mask))
+        np.testing.assert_array_equal(np.asarray(ops.unpack_masks(w, d)),
+                                      mask)
+        np.testing.assert_array_equal(np.asarray(w), bitpack.pack_bits_np(mask))
+
+
+def test_legacy_oracle_accepts_wire_uploads():
+    """round_legacy (the parity oracle) must treat wire-format uploads
+    (uint32 mask words + bf16 vectors) identically to their dense
+    twins, not silently stack raw words as masks."""
+    rng = np.random.default_rng(12)
+    n_tasks, d = 5, 200
+    dense_ups, wire_ups = [], []
+    for cid in range(4):
+        k = int(rng.integers(1, 4))
+        tasks = sorted(rng.choice(n_tasks, size=k, replace=False).tolist())
+        tvs = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+        unified, masks, lams = unify_with_modulators(tvs)
+        sizes = [100] * k
+        dense_ups.append(ClientUpload(
+            cid, tasks, quantize_bf16_transport(unified), masks, lams, sizes))
+        wire_ups.append(ClientUpload(
+            cid, tasks, unified.astype(jnp.bfloat16),
+            ops.pack_masks(masks), lams, sizes))
+    a = MaTUServer(MaTUServerConfig(n_tasks=n_tasks))
+    b = MaTUServer(MaTUServerConfig(n_tasks=n_tasks))
+    downs_a = a.round_legacy(dense_ups)
+    downs_b = b.round_legacy(wire_ups)
+    np.testing.assert_allclose(a.last_task_vectors, b.last_task_vectors,
+                               rtol=1e-6, atol=1e-7)
+    for cid in downs_a:
+        np.testing.assert_array_equal(np.asarray(downs_a[cid].masks),
+                                      np.asarray(downs_b[cid].masks))
+
+
+def test_pack_uploads_empty_round_raises():
+    """Satellite fix: an empty round used to die with IndexError on
+    uploads[0]; it must raise a clear ValueError instead."""
+    with pytest.raises(ValueError, match="empty round"):
+        pack_uploads([], n_tasks=4)
+    engine = RoundEngine(EngineConfig(n_tasks=4))
+    with pytest.raises(ValueError, match="empty round"):
+        engine.round([])
+
+
 def test_engine_matches_matu_round_dense():
-    """The dense reference (matu_round on the packed tensors) is the
-    engine's semantics, including m̂ for unheld tasks."""
+    """The dense reference (matu_round on the unpacked tensors, via the
+    matu_round_packed wire adapter) is the engine's semantics."""
     rng = np.random.default_rng(5)
     ups = random_uploads(rng, 6, 5, 200, 3)
     packed = pack_uploads(ups, 5)
+    assert packed.packed and packed.slot_masks.dtype == jnp.uint32
     masks, lams, member, sizes = packed.dense_tensors()
-    dense = matu_round(packed.unified, masks, lams, member, sizes)
+    dense = matu_round(packed.unified.astype(jnp.float32), masks, lams,
+                       member, sizes)
     engine = RoundEngine(EngineConfig(n_tasks=5))
     out = engine.run_packed(packed)
     np.testing.assert_allclose(out.task_vectors, dense.task_vectors,
@@ -105,11 +249,18 @@ def test_engine_matches_matu_round_dense():
     np.testing.assert_allclose(out.tau_hats, dense.tau_hats,
                                rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(out.m_hats, dense.m_hats, rtol=1e-5, atol=1e-6)
+    # the wire adapter reproduces the same dense reference from the
+    # packed tensors directly
+    dense2 = matu_round_packed(
+        packed.unified,
+        ops.pack_masks(masks), lams, member, sizes, packed.d)
+    np.testing.assert_allclose(dense2.task_vectors, dense.task_vectors,
+                               rtol=1e-6, atol=1e-7)
 
 
 def test_unheld_tasks_never_transfer():
-    """Satellite fix: an unheld task contributes nothing to (and receives
-    nothing from) cross-task transfer, in matu_round AND the engine."""
+    """An unheld task contributes nothing to (and receives nothing from)
+    cross-task transfer, in matu_round AND the engine."""
     rng = np.random.default_rng(6)
     n_tasks, d = 5, 150
     # all clients hold tasks 0-2 only; tasks 3-4 unheld this round
@@ -118,10 +269,12 @@ def test_unheld_tasks_never_transfer():
         tasks = [0, 1, 2]
         tvs = jnp.asarray(rng.standard_normal((3, d)), jnp.float32)
         unified, masks, lams = unify_with_modulators(tvs)
-        ups.append(ClientUpload(cid, tasks, unified, masks, lams, [100] * 3))
+        ups.append(ClientUpload(cid, tasks, quantize_bf16_transport(unified),
+                                masks, lams, [100] * 3))
     packed = pack_uploads(ups, n_tasks)
     masks, lams, member, sizes = packed.dense_tensors()
-    dense = matu_round(packed.unified, masks, lams, member, sizes, eps=-1.0)
+    dense = matu_round(packed.unified.astype(jnp.float32), masks, lams,
+                       member, sizes, eps=-1.0)
     # unheld rows/cols of the (masked) similarity are exactly zero
     sim = np.asarray(dense.similarity)
     assert np.all(sim[3:] == 0) and np.all(sim[:, 3:] == 0)
@@ -132,36 +285,44 @@ def test_unheld_tasks_never_transfer():
     np.testing.assert_allclose(out.task_vectors, dense.task_vectors,
                                rtol=1e-5, atol=1e-6)
     # uniform_cross ablation masks unheld tasks the same way
-    uni = matu_round(packed.unified, masks, lams, member, sizes,
-                     uniform_cross=True)
+    uni = matu_round(packed.unified.astype(jnp.float32), masks, lams,
+                     member, sizes, uniform_cross=True)
     np.testing.assert_allclose(uni.task_vectors[3:], 0.0)
 
 
 def test_batched_reunify_matches_per_client():
     """(b) padded batched re-unification ≡ per-client
-    unify_with_modulators on each valid slot subset."""
+    unify_with_modulators on each valid slot subset — with the batched
+    path emitting the wire tensors (bf16 + packed words)."""
     rng = np.random.default_rng(3)
-    b, k, d = 7, 4, 256
+    b, k, d = 7, 4, 250                  # d % 32 != 0: ragged tail words
     valid = rng.random((b, k)) > 0.35
     valid[:, 0] = True
     tvs = rng.standard_normal((b, k, d)).astype(np.float32)
     tvs[~valid] = 0.0
-    unified, masks, lams = batched_client_unify(jnp.asarray(tvs),
+    unified, words, lams = batched_client_unify(jnp.asarray(tvs),
                                                 jnp.asarray(valid))
+    assert unified.dtype == jnp.bfloat16
+    assert words.dtype == jnp.uint32
+    assert words.shape == (b, k, bitpack.packed_width(d))
+    masks = np.asarray(ops.unpack_masks(words, d))
     for i in range(b):
         sel = valid[i]
         tau, msk, lam = unify_with_modulators(jnp.asarray(tvs[i][sel]))
-        np.testing.assert_allclose(unified[i], tau, rtol=1e-6, atol=1e-7)
-        np.testing.assert_array_equal(np.asarray(masks[i])[sel],
-                                      np.asarray(msk))
+        # masks/λ are computed from fp32 values pre-rounding: exact
+        np.testing.assert_array_equal(masks[i][sel], np.asarray(msk))
         np.testing.assert_allclose(np.asarray(lams[i])[sel], lam, rtol=1e-5)
-        assert not np.any(np.asarray(masks[i])[~sel])
+        # the unified wire row is exactly bf16(fp32 unify)
+        np.testing.assert_array_equal(np.asarray(bf16(tau)),
+                                      np.asarray(unified[i]))
+        assert not masks[i][~sel].any()
         np.testing.assert_allclose(np.asarray(lams[i])[~sel], 0.0)
 
 
 def test_dispatch_modes_agree(monkeypatch):
     """(c) the pure-jnp path (REPRO_DISABLE_PALLAS=1) and the Pallas
-    interpreter path agree to 1e-5 on the full round."""
+    interpreter path agree on the full packed round: exact on packed
+    words / integer fields, 1e-5 on fp32, 1 bf16 ulp on wire vectors."""
     rng = np.random.default_rng(4)
     ups = random_uploads(rng, 5, 4, 180, 3)
     engine = RoundEngine(EngineConfig(n_tasks=4))
@@ -177,11 +338,18 @@ def test_dispatch_modes_agree(monkeypatch):
     assert ops.resolve_mode() == "pallas_interpret"
     out_pal = engine.run_packed(packed)
 
-    for a, b in zip(out_ref, out_pal):
-        if a.dtype == bool:
-            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-        else:
-            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+    for name in ("task_vectors", "tau_hats", "similarity", "down_lams",
+                 "n_held"):
+        np.testing.assert_allclose(getattr(out_ref, name),
+                                   getattr(out_pal, name),
+                                   rtol=1e-5, atol=1e-5, err_msg=name)
+    np.testing.assert_array_equal(np.asarray(out_ref.alpha_num),
+                                  np.asarray(out_pal.alpha_num))
+    np.testing.assert_array_equal(np.asarray(out_ref.down_masks),
+                                  np.asarray(out_pal.down_masks))
+    np.testing.assert_allclose(np.asarray(out_ref.down_unified, np.float32),
+                               np.asarray(out_pal.down_unified, np.float32),
+                               rtol=1e-2, atol=1e-5)
 
 
 def test_static_signature_across_participation(monkeypatch):
@@ -207,9 +375,31 @@ def test_static_signature_across_participation(monkeypatch):
     assert traces["n"] == 1, f"retraced {traces['n']}x for same padded shape"
 
 
+def test_wire_bits_measured_from_buffers():
+    """PackedRound.wire_bits / ClientUpload.uplink_bits report the bits
+    of the actual wire tensors: 16d per bf16 vector, 32 per mask word,
+    32 per scaler."""
+    rng = np.random.default_rng(10)
+    d = 100                                # dw = 4 words
+    ups = random_uploads(rng, 3, 5, d, 2)
+    packed = pack_uploads(ups, 5)
+    dw = bitpack.packed_width(d)
+    want = sum(16 * d + len(u.task_ids) * (32 * dw + 32) for u in ups)
+    assert packed.wire_bits() == want
+    wire_up = ClientUpload(0, [0, 1], bf16(np.zeros(d)),
+                           jnp.zeros((2, dw), jnp.uint32), jnp.zeros(2),
+                           [1, 1])
+    assert wire_up.uplink_bits() == 16 * d + 2 * (32 * dw + 32)
+    # the packed wire beats the paper's fp32+dense-bit scheme
+    # (asymptotically (32+k)/(16+k) ≈ 1.9x at k=2)
+    paper = 32 * d + 2 * (d + 32)
+    assert paper / wire_up.uplink_bits() > 1.7
+
+
 def test_strategy_batched_aggregate_matches_legacy_loop():
-    """MaTUStrategy's pre-packed batch path ≡ the legacy per-client
-    unify + server.round_legacy composition."""
+    """MaTUStrategy's pre-packed wire path ≡ the legacy per-client
+    unify + server.round_legacy composition on the same bf16 wire
+    values."""
     from repro.fed.strategies import MaTUStrategy, RoundBatch, Upload
 
     rng = np.random.default_rng(11)
@@ -228,7 +418,8 @@ def test_strategy_batched_aggregate_matches_legacy_loop():
     legacy_ups = []
     for u in uploads:
         unified, masks, lams = unify_with_modulators(u.task_vectors)
-        legacy_ups.append(ClientUpload(u.client_id, u.task_ids, unified,
+        legacy_ups.append(ClientUpload(u.client_id, u.task_ids,
+                                       quantize_bf16_transport(unified),
                                        masks, lams, u.data_sizes))
     legacy_downs = legacy_server.round_legacy(legacy_ups)
 
@@ -237,6 +428,10 @@ def test_strategy_batched_aggregate_matches_legacy_loop():
                                rtol=1e-5, atol=1e-6)
     for u in uploads:
         a, b = legacy_downs[u.client_id], strat.downlinks[u.client_id]
-        np.testing.assert_allclose(a.unified, b.unified, rtol=1e-5, atol=1e-6)
-        np.testing.assert_array_equal(np.asarray(a.masks), np.asarray(b.masks))
+        assert b.packed
+        np.testing.assert_allclose(np.asarray(a.unified),
+                                   np.asarray(b.unified, np.float32),
+                                   rtol=1e-2, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(a.masks),
+                                      np.asarray(b.masks_dense()))
         np.testing.assert_allclose(a.lams, b.lams, rtol=1e-4, atol=1e-6)

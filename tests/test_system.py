@@ -36,10 +36,14 @@ def test_matu_on_vit_backbone_end_to_end():
     hist = sim.run()
 
     assert hist.final_mean_acc > 1.0 / n_classes + 0.05, hist.final_mean_acc
-    # downlinks exist for all participating clients, masks are boolean
+    # downlinks exist for all participating clients, in the wire format:
+    # bf16 unified vector + bit-packed uint32 mask words
     for cid, dl in strat.downlinks.items():
         assert dl.unified.shape == (bb.d,)
-        assert dl.masks.dtype == jnp.bool_
+        assert dl.unified.dtype == jnp.bfloat16
+        assert dl.packed and dl.masks.dtype == jnp.uint32
+        assert dl.masks_dense().dtype == jnp.bool_
+        assert dl.masks_dense().shape[-1] == bb.d
         assert np.all(np.asarray(dl.lams) >= 0)
     # similarity matrix is a valid [0,1] symmetric matrix
     s = np.asarray(strat.server.last_similarity)

@@ -20,6 +20,14 @@ sample the same throttling windows of a noisy shared host.
 
 Full mode tops out at N=32, T=30, d=2^20 — the acceptance grid for the
 wire-format refactor (packed ≥ 1.5x over the PR 1 bool engine on CPU).
+
+With ``--devices N`` (benchmarks.run forces N host devices before jax
+initialises) a fourth leg runs the taskvec-SHARDED packed engine on an
+N-way mesh and the A/B column reports sharded vs single-device.  On a
+CPU host the "devices" are threads carved out of the same socket, so
+the ratio measures shard_map overhead + collective cost, not real
+multi-chip scaling — the TPU grids read the same columns off real
+chips.
 """
 
 from __future__ import annotations
@@ -32,7 +40,7 @@ import numpy as np
 
 from benchmarks.common import save_detail
 from repro.core.client import ClientUpload
-from repro.core.engine import _round_up_pow2
+from repro.core.engine import EngineConfig, RoundEngine, _round_up_pow2
 from repro.core.server import MaTUServer, MaTUServerConfig
 from repro.core.unify import unify_with_modulators
 from repro.kernels import bitpack
@@ -126,7 +134,7 @@ def _time_interleaved(fns, iters):
     return [b * 1e6 for b in best]
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, devices: int = 1):
     grids = ([(8, 8, 1 << 14, 1, 2), (16, 16, 1 << 16, 2, 3)] if quick else
              [(16, 16, 1 << 16, 2, 3), (16, 30, 1 << 18, 2, 3),
               (32, 30, 1 << 20, 3, 4)])
@@ -135,6 +143,11 @@ def run(quick: bool = False):
     # the (slow) legacy baseline needs fewer
     iters = 10
     legacy_iters = 3
+
+    mesh = None
+    if devices > 1:
+        from repro.launch.mesh import make_round_mesh
+        mesh = make_round_mesh(devices)
 
     rows, detail = [], {}
     for n, n_tasks, d, k_lo, k_hi in grids:
@@ -150,12 +163,18 @@ def run(quick: bool = False):
         server = MaTUServer(MaTUServerConfig(n_tasks=n_tasks))
         engine = server.engine
         # bool/fp32 A/B leg (the PR 1 engine, byte-for-byte) vs the
-        # packed wire-format default path, iterations interleaved
-        _block_downlinks(engine.round(ups, packed=False)[0])
-        _block_downlinks(engine.round(wire)[0])
-        us_bool, us_packed = _time_interleaved(
-            [lambda: engine.round(ups, packed=False)[0],
-             lambda: engine.round(wire)[0]], iters)
+        # packed wire-format default path (+ the sharded packed engine
+        # when a mesh is up), iterations interleaved
+        legs = [lambda: engine.round(ups, packed=False)[0],
+                lambda: engine.round(wire)[0]]
+        if mesh is not None:
+            sharded = RoundEngine(EngineConfig(n_tasks=n_tasks), mesh=mesh)
+            legs.append(lambda: sharded.round(wire)[0])
+        for leg in legs:
+            _block_downlinks(leg())                     # warm caches
+        times = _time_interleaved(legs, iters)
+        us_bool, us_packed = times[0], times[1]
+        us_sharded = times[2] if mesh is not None else None
 
         bytes_bool = _round_wire_bytes(ups, packed=False)
         bytes_packed = _round_wire_bytes(wire, packed=True)
@@ -187,6 +206,15 @@ def run(quick: bool = False):
             "n": n, "n_tasks": n_tasks, "d": d,
             "k_lo": k_lo, "k_hi": k_hi,
         }
+        if us_sharded is not None:
+            sh_ab = us_packed / us_sharded
+            rows.append((f"round_engine/{tag}/engine_sharded", us_sharded,
+                         f"{devices}dev {sh_ab:.2f}x vs single "
+                         f"{bytes_packed / 1e6:.0f}MB"))
+            detail[tag].update(
+                devices=devices,
+                us_engine_sharded=us_sharded,
+                speedup_sharded_vs_single=sh_ab)
 
     save_detail("round_engine", detail)
     return {"rows": rows, "detail": detail}

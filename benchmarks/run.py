@@ -3,12 +3,19 @@ roofline.  Prints ``name,us_per_call,derived`` CSV; detail JSON lands in
 results/bench/.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+                                            [--devices N]
+
+``--devices N`` forces N host devices (XLA_FLAGS, set before any jax
+import) so benches with a sharded leg (round_engine) can A/B the
+taskvec-sharded engine against the single-device one on a CPU host.
 """
 
 from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
+import os
 import sys
 import traceback
 
@@ -30,7 +37,18 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced rounds/sizes for CI-speed runs")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="force N host devices; benches that take a "
+                         "``devices`` kwarg add a sharded A/B leg")
     args = ap.parse_args()
+
+    if args.devices > 1:
+        # must land before the first transitive jax import below —
+        # jax locks the device count on first init
+        assert "jax" not in sys.modules, "--devices needs jax unimported"
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
 
     benches = [b for b in BENCHES
                if args.only in (None, b, b.removeprefix("bench_"))]
@@ -39,7 +57,10 @@ def main() -> None:
     for name in benches:
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
-            out = mod.run(quick=args.quick)
+            kw = {}
+            if "devices" in inspect.signature(mod.run).parameters:
+                kw["devices"] = args.devices
+            out = mod.run(quick=args.quick, **kw)
             for row in out["rows"]:
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
             sys.stdout.flush()

@@ -82,6 +82,42 @@ The jit cache is keyed on (shape signature, dispatch mode, d); the
 mode is resolved from the environment once per call (see
 ``ops.resolve_mode``) so ``REPRO_DISABLE_PALLAS`` /
 ``REPRO_PALLAS_INTERPRET`` A/B checks never collide in the cache.
+
+Sharding contract
+-----------------
+With a mesh, one engine call runs distributed over the ``taskvec``
+logical axis (``repro.nn.sharding``: d shards over every mesh axis the
+rule names — ("pod", "data", "model") on the production pods, all 8
+host devices on the CI debug mesh):
+
+* **layout** — every d-axis tensor (``unified``, ``slot_masks``,
+  ``down_unified``, ``down_masks``, τ̂/τ/α) splits on its LAST axis
+  into ``n_shards`` contiguous slices; per-slot scalars (λ, sizes,
+  task ids, validity) are replicated.  ``pack_uploads`` /
+  ``pack_from_slots`` / ``batched_client_unify`` place the buffers
+  with the matching ``NamedSharding`` at the wire boundary, so the
+  round never reshards.
+* **padding** — d is zero-padded to ``pad_d_for_shards(d, n_shards)``:
+  each shard holds a power-of-two multiple of 256 coords.  256 coords
+  = 8 uint32 words (``bitpack.WORD_BITS`` — packed mask words are
+  never split mid-word, the wire layout stays the single source of
+  truth) and one λ reduction block (``ref.LAMBDA_BLOCK``).  Padded
+  coords carry zero masks/vectors and drop out of every reduction;
+  outputs are sliced back to d.
+* **collectives** — ``_round_impl`` runs ``ops.matu_round_slots`` /
+  ``_packed`` under ``shard_map``; per-coordinate math (Eq. 3, 4, 6, 7
+  and the downlink re-unification) never crosses shards.  Exactly two
+  reductions do: one integer psum of the Eq. 5 (T, T) popcount dots
+  (exact under any order), and one psum of the λ numerator/denominator
+  block-tree roots (``ref._lam_totals``).  Everything derived from the
+  per-client scalars (γ, N_t, held) is computed replicated.  No
+  all-gather / all-to-all / reduce-scatter appears in the round HLO.
+* **parity** — the λ reductions run on a fixed 256-coord block grid
+  combined by a shard-count-invariant binary tree, so the sharded
+  round is **bit-identical** to the single-device round in "ref" mode
+  for both the packed and bool layouts (power-of-two shard counts).
+  On the Pallas paths masks/m̂/similarity stay bit-identical and λ
+  agrees to fp32 accumulation tolerance (the PR 2 tile caveat).
 """
 
 from __future__ import annotations
@@ -93,10 +129,14 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.aggregation import EPS_DEFAULT, KAPPA_DEFAULT, RHO_DEFAULT
 from repro.core.client import ClientDownlink, ClientUpload
 from repro.kernels import bitpack, ops
+from repro.kernels.ref import LAMBDA_BLOCK, _next_pow2
+from repro.nn.sharding import taskvec_axes, taskvec_sharding
 
 
 @dataclass(frozen=True)
@@ -128,10 +168,18 @@ class PackedRound:
     slot_valid: jax.Array            # (n_max, k_max) bool
     n_tasks: int
     d: int                           # unpacked feature count (static)
+    # d after the taskvec-shard padding (pad_d_for_shards); equals d
+    # when packed without a mesh.  The d-axis tensors above carry THIS
+    # width; wire accounting and output slicing use the true ``d``.
+    d_pad: Optional[int] = None
 
     @property
     def n_clients(self) -> int:
         return len(self.client_ids)
+
+    @property
+    def padded_d(self) -> int:
+        return self.d_pad or self.d
 
     @property
     def packed(self) -> bool:
@@ -203,10 +251,34 @@ def _round_up_pow2(n: int) -> int:
     return 1 if n <= 1 else 1 << (n - 1).bit_length()
 
 
+def pad_d_for_shards(d: int, n_shards: int) -> int:
+    """Padded feature count for a taskvec-sharded round: each of the
+    ``n_shards`` contiguous d-slices is a power-of-two multiple of 256
+    coords — word-aligned for the packed wire layout (256 = 8 ×
+    ``bitpack.WORD_BITS``) and block-aligned for the shard-invariant λ
+    reduction grid (``ref.LAMBDA_BLOCK``), which is what makes the
+    sharded λs bit-identical to the single-device round's.  Identity
+    when unsharded."""
+    if n_shards <= 1:
+        return d
+    per_shard_blocks = _next_pow2(-(-d // (n_shards * LAMBDA_BLOCK)))
+    return n_shards * LAMBDA_BLOCK * per_shard_blocks
+
+
+def _mesh_layout(mesh: Optional[Mesh]):
+    """(axes, sizes, n_shards) of the taskvec rule on this mesh."""
+    if mesh is None:
+        return (), (), 1
+    axes = taskvec_axes(mesh)
+    sizes = tuple(int(mesh.shape[a]) for a in axes)
+    return axes, sizes, int(np.prod(sizes)) if axes else 1
+
+
 def pack_uploads(uploads: Sequence[ClientUpload], n_tasks: int, *,
                  n_max: Optional[int] = None,
                  k_max: Optional[int] = None,
-                 packed: bool = True) -> PackedRound:
+                 packed: bool = True,
+                 mesh: Optional[Mesh] = None) -> PackedRound:
     """Pack a ragged round of uploads into the engine's slot layout.
 
     Pure data movement (numpy fills + ``np.packbits`` of O(Σ k_n · d)
@@ -215,12 +287,19 @@ def pack_uploads(uploads: Sequence[ClientUpload], n_tasks: int, *,
     legacy bool/fp32 layout (A/B baseline).  A client's bool masks are
     bit-packed and its unified vector rounded to bf16 here — this IS
     the uplink quantisation, applied once at the wire boundary.
+
+    With ``mesh``, d is zero-padded to ``pad_d_for_shards`` and every
+    d-axis tensor is placed with its taskvec ``NamedSharding`` (packed
+    mask words split on whole 8-word blocks — never mid-word); scalars
+    are replicated onto the mesh.  See the sharding contract above.
     """
     if not uploads:
         raise ValueError("pack_uploads: empty round (no uploads) — "
                          "sample at least one client or skip the round")
     n = len(uploads)
     d = int(uploads[0].unified.shape[0])
+    _, _, n_shards = _mesh_layout(mesh)
+    d_pad = pad_d_for_shards(d, n_shards)
     n_max = n_max or _round_up_pow2(n)
     k_max = k_max or _round_up_pow2(max(len(u.task_ids) for u in uploads))
     if n_max < n:
@@ -235,14 +314,17 @@ def pack_uploads(uploads: Sequence[ClientUpload], n_tasks: int, *,
     if packed:
         import ml_dtypes
         vec_dtype = ml_dtypes.bfloat16
-    unified = np.empty((n_max, d), vec_dtype)
+    unified = np.empty((n_max, d_pad), vec_dtype)
     unified[n:] = 0.0
+    unified[:, d:] = 0.0
     if packed:
         dw = bitpack.packed_width(d)
-        slot_masks = np.zeros((n_max, k_max, dw), np.uint32)
+        slot_masks = np.zeros((n_max, k_max, bitpack.packed_width(d_pad)),
+                              np.uint32)
     else:
-        slot_masks = np.empty((n_max, k_max, d), bool)
+        slot_masks = np.empty((n_max, k_max, d_pad), bool)
         slot_masks[n:] = False
+        slot_masks[:, :, d:] = False
     slot_lams = np.zeros((n_max, k_max), np.float32)
     slot_sizes = np.zeros((n_max, k_max), np.float32)
     slot_tasks = np.full((n_max, k_max), n_tasks, np.int32)
@@ -250,87 +332,173 @@ def pack_uploads(uploads: Sequence[ClientUpload], n_tasks: int, *,
 
     for i, up in enumerate(uploads):
         k = len(up.task_ids)
-        unified[i] = np.asarray(up.unified)
+        unified[i, :d] = np.asarray(up.unified)
         m = np.asarray(up.masks)
         if packed:
             # accept either bool masks (legacy clients — packed here at
             # the wire boundary) or already-packed words
-            slot_masks[i, :k] = (m if m.dtype == np.uint32
-                                 else bitpack.pack_bits_np(m))
+            slot_masks[i, :k, :dw] = (m if m.dtype == np.uint32
+                                      else bitpack.pack_bits_np(m))
         else:
-            slot_masks[i, :k] = (bitpack.unpack_bits_np(m, d)
-                                 if m.dtype == np.uint32 else m)
+            slot_masks[i, :k, :d] = (bitpack.unpack_bits_np(m, d)
+                                     if m.dtype == np.uint32 else m)
             slot_masks[i, k:] = False
         slot_lams[i, :k] = np.asarray(up.lams, np.float32)
         slot_sizes[i, :k] = np.asarray(up.data_sizes, np.float32)
         slot_tasks[i, :k] = up.task_ids
         slot_valid[i, :k] = True
 
-    uni = jnp.asarray(unified)                    # bf16 wire dtype if packed
+    arrays = (unified, slot_masks, slot_lams, slot_sizes, slot_tasks,
+              slot_valid)
+    if n_shards > 1:
+        rep = NamedSharding(mesh, P())
+        put = (taskvec_sharding(mesh, 2), taskvec_sharding(mesh, 3),
+               rep, rep, rep, rep)
+        uni, masks, lams, sizes, tasks, valid = (
+            jax.device_put(a, s) for a, s in zip(arrays, put))
+    else:
+        uni, masks, lams, sizes, tasks, valid = map(jnp.asarray, arrays)
     return PackedRound([u.client_id for u in uploads],
                        [list(u.task_ids) for u in uploads],
-                       uni, jnp.asarray(slot_masks),
-                       jnp.asarray(slot_lams), jnp.asarray(slot_sizes),
-                       jnp.asarray(slot_tasks), jnp.asarray(slot_valid),
-                       n_tasks, d)
+                       uni, masks, lams, sizes, tasks, valid,
+                       n_tasks, d, d_pad if n_shards > 1 else None)
 
 
 def pack_from_slots(client_ids: List[int], task_ids: List[List[int]],
                     unified: jax.Array, slot_masks: jax.Array,
                     slot_lams: jax.Array, slot_tasks: jax.Array,
                     slot_valid: jax.Array, slot_sizes: jax.Array,
-                    n_tasks: int) -> PackedRound:
+                    n_tasks: int, *, d: Optional[int] = None,
+                    mesh: Optional[Mesh] = None) -> PackedRound:
     """Build a PackedRound from already-batched slot tensors (the
     strategy's pre-packed upload path) — zero copies, the slot layout
     IS the engine's native layout.  ``slot_masks`` may be uint32 wire
-    words (``batched_client_unify`` output) or legacy dense bool."""
-    d = int(unified.shape[-1])
+    words (``batched_client_unify`` output) or legacy dense bool.
+
+    ``d`` is the true feature count when the d-axis tensors already
+    carry the taskvec-shard padding (``batched_client_unify`` with a
+    mesh emits them padded + sharded); with ``mesh`` given and
+    *unpadded* tensors, the pad + sharded placement happens here."""
+    packed = slot_masks.dtype == jnp.uint32
+    width = int(unified.shape[-1])
+    d = d or width
+    _, _, n_shards = _mesh_layout(mesh)
+    d_pad = pad_d_for_shards(d, n_shards)
+    if width not in (d, d_pad):
+        raise ValueError(f"pack_from_slots: unified width {width} matches "
+                         f"neither d={d} nor the shard-padded {d_pad}")
+    if n_shards > 1 and width != d_pad:
+        unified = jnp.pad(unified, ((0, 0), (0, d_pad - width)))
+        w_pad = (d_pad // 32 - slot_masks.shape[-1] if packed
+                 else d_pad - slot_masks.shape[-1])
+        slot_masks = jnp.pad(slot_masks,
+                             ((0, 0), (0, 0), (0, w_pad)))
+    if n_shards > 1:
+        rep = NamedSharding(mesh, P())
+        unified = jax.device_put(unified, taskvec_sharding(mesh, 2))
+        slot_masks = jax.device_put(slot_masks, taskvec_sharding(mesh, 3))
+        put_rep = lambda x: jax.device_put(x, rep)  # noqa: E731
+    else:
+        put_rep = lambda x: x  # noqa: E731
     return PackedRound(client_ids, task_ids, unified, slot_masks,
-                       slot_lams.astype(jnp.float32),
-                       slot_sizes.astype(jnp.float32),
-                       slot_tasks.astype(jnp.int32), slot_valid,
-                       n_tasks, d)
+                       put_rep(slot_lams.astype(jnp.float32)),
+                       put_rep(slot_sizes.astype(jnp.float32)),
+                       put_rep(slot_tasks.astype(jnp.int32)),
+                       put_rep(slot_valid),
+                       n_tasks, d, d_pad if n_shards > 1 else None)
 
 
 def _round_impl(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
-                slot_tasks, *, cfg: EngineConfig, mode: str, d: int):
-    """The whole server step, traced once per (shapes, mode, d).  The
-    mask dtype selects the wire-format (uint32) or bool A/B path."""
+                slot_tasks, *, cfg: EngineConfig, mode: str, d: int,
+                mesh: Optional[Mesh] = None,
+                axes: Tuple[str, ...] = (),
+                axis_sizes: Tuple[int, ...] = ()):
+    """The whole server step, traced once per (shapes, mode, d, mesh).
+    The mask dtype selects the wire-format (uint32) or bool A/B path;
+    with a (mesh, taskvec axes) pair the op runs under ``shard_map``
+    per the engine's sharding contract."""
     kw = dict(rho=cfg.rho, eps=cfg.eps, kappa=cfg.kappa,
               cross_task=cfg.cross_task, uniform_cross=cfg.uniform_cross,
               mode=mode)
-    if slot_masks.dtype == jnp.uint32:
-        return ops.matu_round_slots_packed(
+    packed = slot_masks.dtype == jnp.uint32
+    n_shards = int(np.prod(axis_sizes)) if axes else 1
+    if mesh is None or n_shards == 1:
+        if packed:
+            return ops.matu_round_slots_packed(
+                unified, slot_masks, slot_lams, slot_sizes, slot_valid,
+                slot_tasks, cfg.n_tasks, d, **kw)
+        return ops.matu_round_slots(
             unified, slot_masks, slot_lams, slot_sizes, slot_valid,
-            slot_tasks, cfg.n_tasks, d, **kw)
-    return ops.matu_round_slots(
-        unified, slot_masks, slot_lams, slot_sizes, slot_valid, slot_tasks,
-        cfg.n_tasks, **kw)
+            slot_tasks, cfg.n_tasks, **kw)
+
+    d_pad = int(unified.shape[-1])
+    d_local = d_pad // n_shards
+    ax = axes[0] if len(axes) == 1 else axes
+    s2, s3, rep = P(None, ax), P(None, None, ax), P()
+    kw.update(axis_name=axes, axis_sizes=axis_sizes, d_norm=d)
+
+    if packed:
+        def body(u, m, lam, sz, val, tid):
+            return ops.matu_round_slots_packed(
+                u, m, lam, sz, val, tid, cfg.n_tasks, d_local, **kw)
+        # (tv, τ̂, α_num, n_held, sim, down_uni, down_words, down_lams)
+        out_specs = (s2, s2, s2, rep, rep, s2, s3, rep)
+    else:
+        def body(u, m, lam, sz, val, tid):
+            return ops.matu_round_slots(
+                u, m, lam, sz, val, tid, cfg.n_tasks, **kw)
+        # (tv, τ̂, m̂, sim, down_uni, down_masks, down_lams)
+        out_specs = (s2, s2, s2, rep, s2, s3, rep)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(s2, s3, rep, rep, rep, rep),
+                     out_specs=out_specs, check_rep=False)(
+        unified, slot_masks, slot_lams, slot_sizes, slot_valid, slot_tasks)
 
 
 class RoundEngine:
     """Stateless per-round executor; owns only jit caches (one per
-    (dispatch mode, d) — shapes are handled by jax.jit's own cache)."""
+    (dispatch mode, d) — shapes are handled by jax.jit's own cache)
+    and, optionally, the mesh the round shards over (see the sharding
+    contract in the module docstring)."""
 
-    def __init__(self, cfg: EngineConfig):
+    def __init__(self, cfg: EngineConfig, mesh: Optional[Mesh] = None):
         self.cfg = cfg
         self._impls: Dict[tuple, object] = {}
+        self.use_mesh(mesh)
+
+    def use_mesh(self, mesh: Optional[Mesh]) -> None:
+        """Install (or clear) the taskvec mesh; resets the jit caches —
+        the traced program embeds the shard_map layout."""
+        self.mesh = mesh
+        self._axes, self._axis_sizes, self.n_shards = _mesh_layout(mesh)
+        self._impls.clear()
 
     def _impl(self, mode: str, d: int):
         fn = self._impls.get((mode, d))
         if fn is None:
             import repro.core.engine as _mod
-            fn = jax.jit(functools.partial(_mod._round_impl, cfg=self.cfg,
-                                           mode=mode, d=d))
+            fn = jax.jit(functools.partial(
+                _mod._round_impl, cfg=self.cfg, mode=mode, d=d,
+                mesh=self.mesh, axes=self._axes,
+                axis_sizes=self._axis_sizes))
             self._impls[(mode, d)] = fn
         return fn
 
     def run_packed(self, packed: PackedRound, *,
                    mode: Optional[str] = None) -> EngineOutput:
         mode = mode or ops.resolve_mode()
+        d_pad = pad_d_for_shards(packed.d, self.n_shards)
+        if packed.padded_d != d_pad:
+            raise ValueError(
+                f"run_packed: batch padded to d={packed.padded_d} but the "
+                f"engine's mesh shards {self.n_shards} ways (wants {d_pad}) "
+                f"— pack with the same mesh the engine holds")
         out = self._impl(mode, packed.d)(
             packed.unified, packed.slot_masks, packed.slot_lams,
             packed.slot_sizes, packed.slot_valid, packed.slot_tasks)
+        if d_pad != packed.d:
+            out = _slice_outputs(out, packed.d, packed.packed)
         if packed.packed:
             (tv, tau, a_num, n_held, sim, du, dm, dl) = out
             return EngineOutput(tv, tau, sim, du, dm, dl,
@@ -359,9 +527,25 @@ class RoundEngine:
         """Pack → run → unpack: the drop-in replacement for the legacy
         per-task Python loop in ``MaTUServer.round``.  ``packed=False``
         runs the bool/fp32 A/B layout."""
-        batch = pack_uploads(uploads, self.cfg.n_tasks, packed=packed)
+        batch = pack_uploads(uploads, self.cfg.n_tasks, packed=packed,
+                             mesh=self.mesh)
         out = self.run_packed(batch, mode=mode)
         return self.downlinks(batch, out), out
+
+
+def _slice_outputs(out: tuple, d: int, packed: bool) -> tuple:
+    """Slice a sharded round's padded d-axis outputs back to the true
+    feature count (mask words to ceil(d/32) — padded coords carry zero
+    bits, so the wire tail-bit convention holds).  Dispatched outside
+    the round jit, on the already-sharded device buffers."""
+    dw = bitpack.packed_width(d)
+    if packed:
+        (tv, tau, a_num, n_held, sim, du, dm, dl) = out
+        return (tv[:, :d], tau[:, :d], a_num[:, :d], n_held, sim,
+                du[:, :d], dm[:, :, :dw], dl)
+    (tv, tau, m_hats, sim, du, dm, dl) = out
+    return (tv[:, :d], tau[:, :d], m_hats[:, :d], sim,
+            du[:, :d], dm[:, :, :d], dl)
 
 
 # -- batched client-side unification ----------------------------------------
@@ -372,8 +556,30 @@ def _client_unify_jit(mode: str, packed: bool):
     return jax.jit(functools.partial(fn, mode=mode))
 
 
+@functools.lru_cache(maxsize=None)
+def _client_unify_sharded_jit(mode: str, packed: bool, mesh: Mesh,
+                              eps: float = 1e-12):
+    """shard_map'd fused unify: per-shard kernels on the local d-slice,
+    one psum for the λ num/den partial sums (λ matches the unsharded
+    call to fp32 accumulation tolerance; masks / bf16 vectors are
+    per-coordinate and bit-identical)."""
+    axes, _, _ = _mesh_layout(mesh)
+    ax = axes[0] if len(axes) == 1 else axes
+    s2, s3, rep = P(None, ax), P(None, None, ax), P()
+
+    def body(tv, valid):
+        uni, masks, num, den = ops.fused_unify_raw(tv, valid, packed=packed,
+                                                   mode=mode)
+        num, den = jax.lax.psum((num, den), axes)
+        return uni, masks, num / jnp.maximum(den, eps)
+
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=(s3, rep),
+                             out_specs=(s2, s3, rep), check_rep=False))
+
+
 def batched_client_unify(task_vectors: jax.Array, valid: jax.Array, *,
-                         mode: Optional[str] = None, packed: bool = True):
+                         mode: Optional[str] = None, packed: bool = True,
+                         mesh: Optional[Mesh] = None):
     """All clients' upload construction in one fused call.
 
     task_vectors (N, k_max, d) zero-padded stacks; valid (N, k_max).
@@ -384,6 +590,21 @@ def batched_client_unify(task_vectors: jax.Array, valid: jax.Array, *,
     unified vector rounded to bf16 *after* the masks/λ were derived
     from it in fp32.  ``packed=False`` returns the legacy
     (fp32, bool, fp32) triple.
+
+    With ``mesh``, d is zero-padded to ``pad_d_for_shards`` and the
+    call runs under ``shard_map``; the returned d-axis tensors keep the
+    padded width and the taskvec sharding — exactly what
+    ``pack_from_slots(..., d=true_d, mesh=mesh)`` expects.
     """
     mode = mode or ops.resolve_mode()
-    return _client_unify_jit(mode, packed)(task_vectors, valid)
+    _, _, n_shards = _mesh_layout(mesh)
+    if n_shards == 1:
+        return _client_unify_jit(mode, packed)(task_vectors, valid)
+    d = int(task_vectors.shape[-1])
+    d_pad = pad_d_for_shards(d, n_shards)
+    if d_pad != d:
+        task_vectors = jnp.pad(task_vectors,
+                               ((0, 0), (0, 0), (0, d_pad - d)))
+    task_vectors = jax.device_put(task_vectors, taskvec_sharding(mesh, 3))
+    valid = jax.device_put(valid, NamedSharding(mesh, P()))
+    return _client_unify_sharded_jit(mode, packed, mesh)(task_vectors, valid)

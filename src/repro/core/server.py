@@ -42,13 +42,21 @@ class MaTUServerConfig:
 
 
 class MaTUServer:
-    def __init__(self, cfg: MaTUServerConfig):
+    def __init__(self, cfg: MaTUServerConfig, mesh=None):
+        """``mesh``: optional jax Mesh — the round then runs sharded
+        over the taskvec axis (see the engine's sharding contract);
+        None keeps the single-device path byte-for-byte."""
         self.cfg = cfg
         self.engine = RoundEngine(EngineConfig(
             n_tasks=cfg.n_tasks, rho=cfg.rho, eps=cfg.eps, kappa=cfg.kappa,
-            cross_task=cfg.cross_task, uniform_cross=cfg.uniform_cross))
+            cross_task=cfg.cross_task, uniform_cross=cfg.uniform_cross),
+            mesh=mesh)
         self.last_similarity: Optional[jax.Array] = None
         self.last_task_vectors: Optional[jax.Array] = None
+
+    def use_mesh(self, mesh) -> None:
+        """Install (or clear) the taskvec mesh on the round engine."""
+        self.engine.use_mesh(mesh)
 
     def round(self, uploads: List[ClientUpload]) -> Dict[int, ClientDownlink]:
         """One server step through the batched round engine."""

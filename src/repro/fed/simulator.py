@@ -58,15 +58,30 @@ class History:
         b = self.uplink_bits_per_round
         return float(np.mean(b)) if b else 0.0
 
+    @property
+    def mean_downlink_bits(self) -> float:
+        """Mean measured downlink wire bits per recorded round (0.0
+        before any round was recorded — mirrors mean_uplink_bits)."""
+        b = self.downlink_bits_per_round
+        return float(np.mean(b)) if b else 0.0
+
 
 class FedSimulator:
     def __init__(self, cfg: FedConfig, constellation: Constellation,
-                 split: FedSplit, backbone, strategy: Strategy):
+                 split: FedSplit, backbone, strategy: Strategy,
+                 mesh=None):
+        """``mesh``: optional jax Mesh threaded to the strategy — MaTU
+        then runs its server round sharded over the taskvec axis (the
+        engine's sharding contract); the simulation loop itself is
+        unchanged, so the same script runs on 1 device and on N."""
         self.cfg = cfg
         self.con = constellation
         self.split = split
         self.backbone = backbone
         self.strategy = strategy
+        self.mesh = mesh
+        if mesh is not None:
+            strategy.use_mesh(mesh)
         self.rng = jax.random.PRNGKey(cfg.seed)
         self.n_clients = len(split.tasks)
 

@@ -27,6 +27,7 @@ from repro.core.baselines import (cosine_similarity_matrix, greedy_group,
 from repro.core.client import ClientDownlink, ClientUpload
 from repro.core.engine import (batched_client_unify, pack_from_slots,
                                _round_up_pow2)
+from repro.kernels import bitpack
 from repro.core.server import MaTUServer, MaTUServerConfig
 from repro.core.unify import modulate
 
@@ -126,6 +127,11 @@ class Strategy:
         the ragged per-client path.  Batched strategies override."""
         self.aggregate(batch.uploads)
 
+    def use_mesh(self, mesh) -> None:
+        """Install a device mesh for strategies whose server step can
+        run sharded (MaTU's taskvec-sharded round engine); the default
+        is a no-op so per-client strategies ignore it."""
+
     def eval_vectors(self, task_id: int) -> List[jax.Array]:
         raise NotImplementedError
 
@@ -145,16 +151,24 @@ class MaTUStrategy(Strategy):
 
     def __init__(self, n_tasks: int, d: int, *, rho: float = 0.4,
                  eps: float = 0.5, kappa: int = 3, cross_task: bool = True,
-                 uniform_cross: bool = False, compress: bool = False):
+                 uniform_cross: bool = False, compress: bool = False,
+                 mesh=None):
         super().__init__(n_tasks, d)
+        self.mesh = mesh
         self.server = MaTUServer(MaTUServerConfig(
             n_tasks=n_tasks, rho=rho, eps=eps, kappa=kappa,
-            cross_task=cross_task, uniform_cross=uniform_cross))
+            cross_task=cross_task, uniform_cross=uniform_cross), mesh=mesh)
         self.downlinks: Dict[int, ClientDownlink] = {}
         self.client_tasks: Dict[int, List[int]] = {}
         # beyond-paper: bf16 vector + entropy-coded masks (repro.fed.compression)
         self.compress = compress
         self._last_uploads: List[ClientUpload] = []
+
+    def use_mesh(self, mesh) -> None:
+        """Shard the server round over the taskvec axis of ``mesh``
+        (None restores the single-device path)."""
+        self.mesh = mesh
+        self.server.use_mesh(mesh)
 
     def task_init(self, client_id: int, task_id: int) -> jax.Array:
         dl = self.downlinks.get(client_id)
@@ -173,16 +187,22 @@ class MaTUStrategy(Strategy):
         round, and the engine runs Eq. 3–7 + downlink re-unification in
         a single jitted step over the packed tensors — the uplink is
         byte-identical to what the engine computes on, so communication
-        accounting is measured off these buffers, not simulated."""
-        unified, mask_words, lams = batched_client_unify(batch.task_vectors,
-                                                         batch.valid)
+        accounting is measured off these buffers, not simulated.  With
+        a mesh installed both steps run sharded over the taskvec axis
+        (the wire tensors are born with the d-axis NamedSharding and
+        never reshard between unify and round)."""
+        unified, mask_words, lams = batched_client_unify(
+            batch.task_vectors, batch.valid, mesh=self.mesh)
         packed = pack_from_slots(batch.client_ids, batch.task_ids, unified,
                                  mask_words, lams, batch.slot_tasks,
-                                 batch.valid, batch.slot_sizes, self.n_tasks)
+                                 batch.valid, batch.slot_sizes, self.n_tasks,
+                                 d=self.d, mesh=self.mesh)
         self.downlinks.update(self.server.round_packed(packed))
+        dw = bitpack.packed_width(self.d)
         self._last_uploads = [
-            ClientUpload(u.client_id, list(u.task_ids), unified[i],
-                         mask_words[i, :len(u.task_ids)],
+            ClientUpload(u.client_id, list(u.task_ids),
+                         unified[i, :self.d],
+                         mask_words[i, :len(u.task_ids), :dw],
                          lams[i, :len(u.task_ids)], list(u.data_sizes))
             for i, u in enumerate(batch.uploads)
         ]

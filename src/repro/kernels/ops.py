@@ -100,6 +100,26 @@ def sign_sim(tau_hats: jax.Array, *, mode: Optional[str] = None) -> jax.Array:
     return sign_sim_pallas(tau_hats, interpret=(mode == "pallas_interpret"))
 
 
+def fused_unify_raw(task_vectors: jax.Array, valid: jax.Array, *,
+                    packed: bool = True, mode: Optional[str] = None):
+    """Division-free core of :func:`fused_unify` /
+    :func:`fused_unify_packed`: returns (unified, masks-or-words,
+    num, den) with the λ division left to the caller — the hook the
+    sharded engine needs to ``psum`` the per-shard λ partial sums
+    before dividing."""
+    mode = _norm(mode)
+    if packed:
+        if mode == "ref":
+            return ref.fused_unify_packed_ref(task_vectors, valid)
+        return fused_unify_packed_pallas(
+            task_vectors, valid, interpret=(mode == "pallas_interpret"))
+    if mode == "ref":
+        return ref.fused_unify_ref(task_vectors, valid)
+    unified, masks, num, den = fused_unify_pallas(
+        task_vectors, valid, interpret=(mode == "pallas_interpret"))
+    return unified, masks > 0.5, num, den
+
+
 def fused_unify(task_vectors: jax.Array, valid: jax.Array, *,
                 eps: float = 1e-12, mode: Optional[str] = None):
     """Batched unify + task-mask + λ-scaler over slot-packed clients.
@@ -109,13 +129,8 @@ def fused_unify(task_vectors: jax.Array, valid: jax.Array, *,
     ``unify_with_modulators(task_vectors[b, valid[b]])`` on the valid
     slots; invalid slots give zero mask rows and λ = 0.
     """
-    mode = _norm(mode)
-    if mode == "ref":
-        unified, masks, num, den = ref.fused_unify_ref(task_vectors, valid)
-    else:
-        unified, masks, num, den = fused_unify_pallas(
-            task_vectors, valid, interpret=(mode == "pallas_interpret"))
-        masks = masks > 0.5
+    unified, masks, num, den = fused_unify_raw(task_vectors, valid,
+                                               packed=False, mode=mode)
     lams = num / jnp.maximum(den, eps)
     return unified, masks, lams
 
@@ -152,12 +167,8 @@ def fused_unify_packed(task_vectors: jax.Array, valid: jax.Array, *,
     fp32 accumulation tolerance on the Pallas paths (different tile
     width).
     """
-    mode = _norm(mode)
-    if mode == "ref":
-        uni, words, num, den = ref.fused_unify_packed_ref(task_vectors, valid)
-    else:
-        uni, words, num, den = fused_unify_packed_pallas(
-            task_vectors, valid, interpret=(mode == "pallas_interpret"))
+    uni, words, num, den = fused_unify_raw(task_vectors, valid,
+                                           packed=True, mode=mode)
     lams = num / jnp.maximum(den, eps)
     return uni, words, lams
 
@@ -260,12 +271,19 @@ def slots_to_dense_packed(slot_mask_words, slot_lams, slot_sizes, slot_valid,
 
 def _round_slots_dense(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
                        slot_tasks, n_tasks, *, rho, eps, kappa, cross_task,
-                       uniform_cross, mode):
+                       uniform_cross, mode, axis_name=None, d_norm=0):
     """Kernel-path round: scatter the slot tensors to the dense
     (N, T, d) layout the Pallas kernels consume, then compose the
     batched masked-agg, sign-sim, and fused-unify kernels.  On TPU the
     dense read is a single HBM stream per kernel; on CPU this path is
-    validation-only (interpret mode)."""
+    validation-only (interpret mode).
+
+    With ``axis_name`` set the function is a ``shard_map`` body on the
+    local d-slice: the Eq. 5 dots go through the popcount kernel (raw
+    integers — the fused normalised kernel cannot be un-normalised
+    exactly) plus one psum, and the λ num/den partial sums one more —
+    λ agrees with the single-device kernels to fp32 accumulation
+    tolerance (tile grouping differs), the PR 2 Pallas caveat."""
     masks_d, lams_d, member_d, sizes_d = slots_to_dense(
         slot_masks, slot_lams, slot_sizes, slot_valid, slot_tasks, n_tasks)
 
@@ -276,7 +294,15 @@ def _round_slots_dense(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
                                           member_d, rho=rho, mode=mode)
     held = jnp.any(member_d, axis=0)
     heldf = held.astype(jnp.float32)
-    sim = sign_sim(tau_hats, mode=mode) * heldf[None, :] * heldf[:, None]
+    if axis_name is None:
+        sim = sign_sim(tau_hats, mode=mode) * heldf[None, :] * heldf[:, None]
+    else:
+        pos, nz = bitpack.sign_planes(tau_hats)
+        dots = sign_sim_packed_pallas(
+            pos, nz, interpret=(mode == "pallas_interpret"))
+        dots = jax.lax.psum(dots, axis_name)
+        sim = (0.5 * (dots.astype(jnp.float32) / d_norm + 1.0)
+               * heldf[None, :] * heldf[:, None])
     weights = ref.cross_weights_ref(sim, held, eps=eps, kappa=kappa,
                                     cross_task=cross_task,
                                     uniform_cross=uniform_cross)
@@ -286,6 +312,8 @@ def _round_slots_dense(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
     tvs_slots = jnp.take(task_vectors, slot_tasks, axis=0, mode="clip")
     uni, dmasks, num, den = fused_unify_pallas(
         tvs_slots, slot_valid, interpret=(mode == "pallas_interpret"))
+    if axis_name is not None:
+        num, den = jax.lax.psum((num, den), axis_name)
     return (task_vectors, tau_hats, m_hats, sim,
             uni, dmasks > 0.5, num, den)
 
@@ -294,7 +322,8 @@ def matu_round_slots(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
                      slot_tasks, n_tasks: int, *, rho: float = 0.4,
                      eps: float = 0.5, kappa: int = 3,
                      cross_task: bool = True, uniform_cross: bool = False,
-                     lam_eps: float = 1e-12, mode: Optional[str] = None):
+                     lam_eps: float = 1e-12, mode: Optional[str] = None,
+                     axis_name=None, axis_sizes=(), d_norm: int = 0):
     """The full MaTU server round over slot-packed uploads — the single
     entry point of :class:`repro.core.engine.RoundEngine`.
 
@@ -304,6 +333,12 @@ def matu_round_slots(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
     batched kernels.  Returns (task_vectors, tau_hats, m_hats,
     similarity, down_unified, down_masks, down_lams).  τ̃ is not
     materialised (derivable as (2τ − τ̂) on rows with donors).
+
+    ``axis_name`` / ``axis_sizes`` / ``d_norm`` make the op a
+    ``shard_map`` body over the taskvec axis (see the engine's sharding
+    contract): inputs are the local d-slice, ``d_norm`` is the global
+    feature count, and the Eq. 5 dots + λ num/den totals are the only
+    cross-shard collectives.
     """
     mode = _norm(mode)
     kw = dict(rho=rho, eps=eps, kappa=kappa, cross_task=cross_task,
@@ -311,11 +346,14 @@ def matu_round_slots(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
     if mode == "ref":
         out = ref.matu_round_slots_ref(unified, slot_masks, slot_lams,
                                        slot_sizes, slot_valid, slot_tasks,
-                                       n_tasks, **kw)
+                                       n_tasks, axis_name=axis_name,
+                                       axis_sizes=axis_sizes, d_norm=d_norm,
+                                       **kw)
     else:
         out = _round_slots_dense(unified, slot_masks, slot_lams, slot_sizes,
                                  slot_valid, slot_tasks, n_tasks,
-                                 mode=mode, **kw)
+                                 mode=mode, axis_name=axis_name,
+                                 d_norm=d_norm, **kw)
     (task_vectors, tau_hats, m_hats, sim,
      down_unified, down_masks, num, den) = out
     down_lams = num / jnp.maximum(den, lam_eps)
@@ -325,12 +363,15 @@ def matu_round_slots(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
 
 def _round_slots_dense_packed(unified, slot_mask_words, slot_lams, slot_sizes,
                               slot_valid, slot_tasks, n_tasks, d, *, rho, eps,
-                              kappa, cross_task, uniform_cross, mode):
+                              kappa, cross_task, uniform_cross, mode,
+                              axis_name=None, d_norm=0):
     """Packed kernel-path round: scatter the uint32 mask words to the
     dense (N, T, d/32) layout, then compose the packed batched
     masked-agg, popcount sign-sim, and packed fused-unify kernels.  The
     mask tensor stays 1 bit/element in HBM end to end; words are
-    expanded to lanes only inside VMEM tiles."""
+    expanded to lanes only inside VMEM tiles.  With ``axis_name`` set
+    this is a ``shard_map`` body on the local d-slice: the popcount
+    dots (exact integers) and the λ num/den partial sums are psum'd."""
     words_d, lams_d, member_d, sizes_d = slots_to_dense_packed(
         slot_mask_words, slot_lams, slot_sizes, slot_valid, slot_tasks,
         n_tasks)
@@ -349,7 +390,10 @@ def _round_slots_dense_packed(unified, slot_mask_words, slot_lams, slot_sizes,
 
     pos, nz = bitpack.sign_planes(tau_hats)
     dots = sign_sim_packed_pallas(pos, nz, interpret=interp)
-    sim = 0.5 * (dots / d + 1.0) * heldf[None, :] * heldf[:, None]
+    if axis_name is not None:
+        dots = jax.lax.psum(dots, axis_name)
+    sim = (0.5 * (dots / (d_norm or d) + 1.0)
+           * heldf[None, :] * heldf[:, None])
     weights = ref.cross_weights_ref(sim, held, eps=eps, kappa=kappa,
                                     cross_task=cross_task,
                                     uniform_cross=uniform_cross)
@@ -359,6 +403,8 @@ def _round_slots_dense_packed(unified, slot_mask_words, slot_lams, slot_sizes,
     tvs_slots = jnp.take(task_vectors, slot_tasks, axis=0, mode="clip")
     uni, dwords, num, den = fused_unify_packed_pallas(
         tvs_slots, slot_valid, interpret=interp)
+    if axis_name is not None:
+        num, den = jax.lax.psum((num, den), axis_name)
     a_u8 = a_num.astype(ref.alpha_dtype(slot_valid.shape[0]))
     return (task_vectors, tau_hats, a_u8, n_t, sim, uni, dwords, num, den)
 
@@ -369,7 +415,8 @@ def matu_round_slots_packed(unified, slot_mask_words, slot_lams, slot_sizes,
                             kappa: int = 3, cross_task: bool = True,
                             uniform_cross: bool = False,
                             lam_eps: float = 1e-12,
-                            mode: Optional[str] = None):
+                            mode: Optional[str] = None,
+                            axis_name=None, axis_sizes=(), d_norm: int = 0):
     """The full MaTU server round over wire-format slot uploads — the
     default entry point of :class:`repro.core.engine.RoundEngine`.
 
@@ -386,6 +433,11 @@ def matu_round_slots_packed(unified, slot_mask_words, slot_lams, slot_sizes,
     down_mask_words uint32, down_lams) — m̂ is re-derivable from
     (alpha_num, n_held, ρ) and never materialised in fp32 on the hot
     path; τ̃ as before is (2τ − τ̂) on rows with donors.
+
+    ``axis_name`` / ``axis_sizes`` / ``d_norm`` make the op a
+    ``shard_map`` body over the taskvec axis — ``d`` is then the LOCAL
+    unpacked count of this shard's slice (a multiple of 32; see the
+    engine's sharding contract) and ``d_norm`` the global one.
     """
     mode = _norm(mode)
     kw = dict(rho=rho, eps=eps, kappa=kappa, cross_task=cross_task,
@@ -393,11 +445,13 @@ def matu_round_slots_packed(unified, slot_mask_words, slot_lams, slot_sizes,
     if mode == "ref":
         out = ref.matu_round_slots_packed_ref(
             unified, slot_mask_words, slot_lams, slot_sizes, slot_valid,
-            slot_tasks, n_tasks, d, **kw)
+            slot_tasks, n_tasks, d, axis_name=axis_name,
+            axis_sizes=axis_sizes, d_norm=d_norm, **kw)
     else:
         out = _round_slots_dense_packed(
             unified, slot_mask_words, slot_lams, slot_sizes, slot_valid,
-            slot_tasks, n_tasks, d, mode=mode, **kw)
+            slot_tasks, n_tasks, d, mode=mode, axis_name=axis_name,
+            d_norm=d_norm, **kw)
     (task_vectors, tau_hats, alpha_num, n_held, sim,
      down_unified, down_mask_words, num, den) = out
     down_lams = num / jnp.maximum(den, lam_eps)

@@ -2,12 +2,24 @@
 
 These mirror ``repro.core`` math exactly; kernel tests sweep shapes and
 dtypes asserting allclose against these.
+
+The two streaming round functions (``matu_round_slots_ref`` /
+``matu_round_slots_packed_ref``) are also the bodies the sharded engine
+runs per shard under ``shard_map``: with ``axis_name`` set they receive
+the local d-slice of every d-axis tensor and reconstruct the few
+genuinely global quantities with explicit collectives — the Eq. 5
+(T, T) sign dots by one ``psum`` (integer-exact under any reduction
+order) and the λ numerator/denominator totals by the shard-invariant
+block-tree reduction below (bit-identical to the single-device round).
 """
 
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.kernels import bitpack
 
@@ -85,13 +97,99 @@ def masked_agg_batched_ref(unified: jax.Array, masks: jax.Array,
 # cache-resident, mirroring the Pallas kernels' VMEM grid over d.
 CHUNK_D = 1 << 14
 
+# Fixed block grid for the λ numerator/denominator reductions over d:
+# partial sums are taken per LAMBDA_BLOCK consecutive coords and the
+# totals combined by a power-of-two-aligned binary tree over block
+# index (``_tree_total``).  Because the grid and tree depend only on
+# the block index — never on chunk width or shard count — the λ totals
+# of the sharded round are bit-identical to the single-device round's,
+# provided shard boundaries land on block boundaries (the engine pads d
+# so every shard holds a power-of-two number of whole blocks).  One
+# block is 8 uint32 mask words, so block alignment subsumes the wire
+# format's 32-bit word-boundary rule (``bitpack.WORD_BITS``).
+LAMBDA_BLOCK = 256
+assert LAMBDA_BLOCK % bitpack.WORD_BITS == 0
+
 
 def _chunked(d: int, chunk: int):
     """Pick an effective chunk (≤ requested, covering small d in one
-    step) and the padded length."""
-    c = min(chunk, max(256, 1 << (d - 1).bit_length()))
+    step) and the padded length.  Chunks are always power-of-two
+    multiples of LAMBDA_BLOCK, so the λ block grid tiles every chunk."""
+    c = min(chunk, max(LAMBDA_BLOCK, 1 << (d - 1).bit_length()))
     pad = (-d) % c
     return c, d + pad
+
+
+def _next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def _block_partials(x: jax.Array) -> jax.Array:
+    """(..., c) -> (..., c // LAMBDA_BLOCK) per-block partial sums over
+    the fixed λ block grid (c is a multiple of LAMBDA_BLOCK)."""
+    s = x.shape
+    return jnp.sum(x.reshape(s[:-1] + (s[-1] // LAMBDA_BLOCK, LAMBDA_BLOCK)),
+                   axis=-1)
+
+
+def _tree_total(p: jax.Array) -> jax.Array:
+    """(..., L) -> (...,): canonical binary-tree sum, pairing elements
+    (2i, 2i+1) at every level after zero-padding L to a power of two.
+
+    The grouping depends only on the index grid, so any zero-padded
+    extension of the same nonneg partials gives the bit-identical total
+    (x + 0.0 is exact) — the property the shard-parity contract rests
+    on."""
+    L = p.shape[-1]
+    Lp = _next_pow2(L)
+    if Lp != L:
+        p = jnp.pad(p, [(0, 0)] * (p.ndim - 1) + [(0, Lp - L)])
+    while p.shape[-1] > 1:
+        p = p[..., 0::2] + p[..., 1::2]
+    return p[..., 0]
+
+
+def _shard_offset(axis_name, axis_sizes) -> jax.Array:
+    """Flat taskvec shard index of the executing device, major→minor in
+    spec order — matches the d-axis layout of a dim sharded over the
+    same mesh-axis tuple."""
+    names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    idx = jnp.int32(0)
+    for a, s in zip(names, axis_sizes):
+        idx = idx * s + lax.axis_index(a)
+    return idx
+
+
+def _lam_totals(parts, axis_name=None, axis_sizes=()):
+    """Finish the λ reductions from per-block partial buffers.
+
+    Each ``parts`` entry is (..., n_blk_local) nonneg fp32 partials on
+    the fixed LAMBDA_BLOCK grid.  Local blocks reduce by the canonical
+    tree; under ``shard_map`` (axis_name set) the per-shard roots are
+    scattered into a (n_shards,)-slot vector — exact, single contributor
+    per slot — combined by ONE ``psum`` covering every λ array, and the
+    tree finishes over the shard axis.  With power-of-two shard counts
+    and whole power-of-two block counts per shard this is the exact
+    canonical tree over the global block grid: bit-identical to the
+    single-device reduction."""
+    loc = tuple(_tree_total(p) for p in parts)
+    if axis_name is None:
+        return loc
+    names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    n_sh = int(np.prod(axis_sizes))
+    off = _shard_offset(names, axis_sizes)
+    # every λ root rides ONE all-reduce: flatten + concat the roots,
+    # scatter into this shard's slot column, psum, tree over shards
+    flat = jnp.concatenate([x.reshape(-1) for x in loc])
+    scat = lax.dynamic_update_slice_in_dim(
+        jnp.zeros((flat.shape[0], n_sh), flat.dtype), flat[:, None], off,
+        axis=1)
+    total = _tree_total(lax.psum(scat, names))
+    out, at = [], 0
+    for x in loc:
+        out.append(total[at:at + x.size].reshape(x.shape))
+        at += x.size
+    return tuple(out)
 
 
 def _unify_block(x, vf):
@@ -205,7 +303,9 @@ def matu_round_slots_packed_ref(unified: jax.Array, slot_mask_words: jax.Array,
                                 eps: float, kappa: int,
                                 cross_task: bool = True,
                                 uniform_cross: bool = False,
-                                chunk: int = CHUNK_D):
+                                chunk: int = CHUNK_D,
+                                axis_name=None, axis_sizes=(),
+                                d_norm: int = 0):
     """Wire-format twin of :func:`matu_round_slots_ref`: the same
     two-pass cache-blocked streaming round, but every big tensor stays
     in its transport layout end to end —
@@ -231,6 +331,14 @@ def matu_round_slots_packed_ref(unified: jax.Array, slot_mask_words: jax.Array,
     op runs in the same order as the bool/fp32 round, so on identical
     (already-quantised) inputs the masks and λs match bit for bit.
 
+    Under ``shard_map`` (``axis_name`` set, with the mesh axis sizes in
+    ``axis_sizes``) every d-axis tensor is the executing shard's slice,
+    ``d`` is the LOCAL unpacked count, and ``d_norm`` carries the global
+    feature count for the Eq. 5 1/d normalisation.  The Eq. 5 popcount
+    dots cross shards through one integer ``psum`` (exact under any
+    reduction order) and the λ num/den totals through the single
+    ``_lam_totals`` psum — per-coordinate math never communicates.
+
     Returns (task_vectors (T, d) fp32, tau_hats (T, d) fp32,
     alpha_num (T, d) uint8, n_t (T,) fp32, similarity (T, T),
     down_unified (N, d) bf16, down_mask_words (N, K, ceil(d/32)),
@@ -240,8 +348,10 @@ def matu_round_slots_packed_ref(unified: jax.Array, slot_mask_words: jax.Array,
     m_rows = n * k
     chunk, dp = _chunked(d, chunk)
     dwc, dwp = chunk // 32, dp // 32
+    n_blk, blkc = dp // LAMBDA_BLOCK, chunk // LAMBDA_BLOCK
     n_seg = n_tasks + 1
     a_dt = alpha_dtype(n)
+    d_norm = d_norm or d
 
     ids = slot_tasks.reshape(m_rows)
     vf = slot_valid.reshape(m_rows).astype(jnp.float32)
@@ -303,8 +413,14 @@ def matu_round_slots_packed_ref(unified: jax.Array, slot_mask_words: jax.Array,
          jnp.zeros((n_tasks, dp), a_dt),
          jnp.zeros((n_tasks, n_tasks), jnp.int32)))
 
+    if axis_name is not None:
+        # the one tensor collective of the sharded round: the (T, T)
+        # popcount dots are exact integers, so the psum is bit-identical
+        # to the single-device accumulation under any reduction order
+        dots = lax.psum(dots, axis_name)
+
     heldf = held.astype(jnp.float32)
-    sim = 0.5 * (dots.astype(jnp.float32) / d + 1.0) \
+    sim = 0.5 * (dots.astype(jnp.float32) / d_norm + 1.0) \
         * heldf[None, :] * heldf[:, None]
     weights = cross_weights_ref(sim, held, eps=eps, kappa=kappa,
                                 cross_task=cross_task,
@@ -315,7 +431,6 @@ def matu_round_slots_packed_ref(unified: jax.Array, slot_mask_words: jax.Array,
 
     c1 = (1.0 / (1.0 + has))
     c2 = (has / (1.0 + has))
-    ids_nk = ids.reshape(n, k)
 
     # ---- pass 2: Eq. 6 + 7 per chunk, downlink re-unify while hot --------
     # m̂ is re-derived from the byte-wide agreement numerator with the
@@ -324,19 +439,19 @@ def matu_round_slots_packed_ref(unified: jax.Array, slot_mask_words: jax.Array,
     # n_tasks), which zeroes them exactly as the bool path's validity
     # multiplies did — no per-element vf masking anywhere in the block.
     def pass2(c, carry):
-        tv_buf, uni_buf, dmask_buf, num_t, den = carry
+        tv_buf, uni_buf, dmask_buf, num_p, den_p = carry
         off = c * chunk
         tau = jax.lax.dynamic_slice_in_dim(tau_hats, off, chunk, axis=1)
         anum = jax.lax.dynamic_slice_in_dim(anum_buf, off, chunk, axis=1)
         alpha = anum.astype(jnp.float32) / n_t_max[:, None]
         m_hat = jnp.where(alpha >= rho, 1.0, alpha)
         tv = c1 * tau + c2 * (m_hat * (norm_w @ tau))
-        num_t = num_t + jnp.sum(jnp.abs(tv), axis=1)
+        num_p = jax.lax.dynamic_update_slice_in_dim(
+            num_p, _block_partials(jnp.abs(tv)), c * blkc, axis=1)
         tv_ext = jnp.concatenate([tv, jnp.zeros((1, chunk), jnp.float32)], 0)
-        # the (N, K, dc) slot expansion is never materialised in fp32:
-        # the σ election fuses the gather into its reduce, and each
-        # slot re-gathers from the cache-resident (T+1, dc) chunk.
-        # Sign agreement is decided by sign algebra, not fp products —
+        # one (N, K, dc) gather feeds the σ election and the per-slot
+        # sweep (the sweep slices it — no re-gather per slot).  Sign
+        # agreement is decided by sign algebra, not fp products —
         # aligned ⟺ x·σ > 0 exactly, and relu(x·σ) = |x| on aligned
         # coords exactly (σ = ±1) — so per-slot work stays in L2-sized
         # (N, dc) tiles.  x·τ_n > 0 ⟺ aligned ∧ μ > 0 (exact up to
@@ -350,14 +465,14 @@ def matu_round_slots_packed_ref(unified: jax.Array, slot_mask_words: jax.Array,
         als = []
         mu = jnp.zeros((n, chunk), jnp.float32)
         for kk in range(k):
-            x_k = jnp.take(tv_ext, ids_nk[:, kk], axis=0)      # (N, dc)
+            x_k = x[:, kk, :]                                  # (N, dc)
             al_k = ((x_k > 0) & posm) | ((x_k < 0) & negm)
             mu = jnp.maximum(mu, jnp.where(al_k, jnp.abs(x_k), 0.0))
             als.append(al_k)
         tau_n = sigma * mu
         mupos = mu[:, None, :] > 0
         dmask = jnp.stack(als, axis=1) & mupos     # zero slots: never set
-        den_c = jnp.sum(jnp.where(dmask, mu[:, None, :], 0.0), axis=2)
+        den_c = _block_partials(jnp.where(dmask, mu[:, None, :], 0.0))
         tv_buf = jax.lax.dynamic_update_slice_in_dim(tv_buf, tv, off, axis=1)
         # fp32 carry (see fused_unify_packed_ref): the bf16 wire
         # rounding happens in one streaming cast after the loop
@@ -365,15 +480,19 @@ def matu_round_slots_packed_ref(unified: jax.Array, slot_mask_words: jax.Array,
                                                       axis=1)
         dmask_buf = jax.lax.dynamic_update_slice_in_dim(
             dmask_buf, bitpack.pack_bits(dmask), c * dwc, axis=2)
-        return tv_buf, uni_buf, dmask_buf, num_t, den + den_c
+        den_p = jax.lax.dynamic_update_slice_in_dim(den_p, den_c, c * blkc,
+                                                    axis=2)
+        return tv_buf, uni_buf, dmask_buf, num_p, den_p
 
-    tv_buf, uni_buf, dmask_buf, num_t, den = jax.lax.fori_loop(
+    tv_buf, uni_buf, dmask_buf, num_p, den_p = jax.lax.fori_loop(
         0, dp // chunk, pass2,
         (jnp.zeros((n_tasks, dp), jnp.float32),
          jnp.zeros((n, dp), jnp.float32),
          jnp.zeros((n, k, dwp), jnp.uint32),
-         jnp.zeros((n_tasks,), jnp.float32),
-         jnp.zeros((n, k), jnp.float32)))
+         jnp.zeros((n_tasks, n_blk), jnp.float32),
+         jnp.zeros((n, k, n_blk), jnp.float32)))
+    # λ totals on the shard-invariant block grid (one psum when sharded)
+    num_t, den = _lam_totals((num_p, den_p), axis_name, axis_sizes)
     num = jnp.concatenate([num_t, jnp.zeros((1,),
                                             jnp.float32)])[ids].reshape(n, k)
 
@@ -404,7 +523,8 @@ def matu_round_slots_ref(unified: jax.Array, slot_masks: jax.Array,
                          slot_valid: jax.Array, slot_tasks: jax.Array,
                          n_tasks: int, *, rho: float, eps: float, kappa: int,
                          cross_task: bool = True, uniform_cross: bool = False,
-                         chunk: int = CHUNK_D):
+                         chunk: int = CHUNK_D,
+                         axis_name=None, axis_sizes=(), d_norm: int = 0):
     """The full MaTU server round (Eq. 3–7 + downlink re-unification)
     over slot-packed uploads, streamed in two cache-blocked passes.
 
@@ -426,11 +546,18 @@ def matu_round_slots_ref(unified: jax.Array, slot_masks: jax.Array,
     Returns (task_vectors, tau_hats, m_hats, similarity, down_unified,
     down_masks, down_num, down_den).  τ̃ is not materialised on the hot
     path — consumers can derive it as (2τ − τ̂) on rows with donors.
+
+    ``axis_name`` / ``axis_sizes`` / ``d_norm``: per-shard execution
+    under ``shard_map`` — see :func:`matu_round_slots_packed_ref` (here
+    the Eq. 5 dots are integer-valued fp32, still exact under any psum
+    order for d < 2²⁴).
     """
     n, k, d = slot_masks.shape
     m_rows = n * k
     chunk, dp = _chunked(d, chunk)
+    n_blk, blkc = dp // LAMBDA_BLOCK, chunk // LAMBDA_BLOCK
     n_seg = n_tasks + 1
+    d_norm = d_norm or d
 
     ids = slot_tasks.reshape(m_rows)
     vf = slot_valid.reshape(m_rows).astype(jnp.float32)
@@ -479,8 +606,11 @@ def matu_round_slots_ref(unified: jax.Array, slot_masks: jax.Array,
          jnp.zeros((n_tasks, dp), jnp.float32),
          jnp.zeros((n_tasks, n_tasks), jnp.float32)))
 
+    if axis_name is not None:
+        dots = lax.psum(dots, axis_name)     # integer-valued: exact
+
     heldf = held.astype(jnp.float32)
-    sim = 0.5 * (dots / d + 1.0) * heldf[None, :] * heldf[:, None]
+    sim = 0.5 * (dots / d_norm + 1.0) * heldf[None, :] * heldf[:, None]
     weights = cross_weights_ref(sim, held, eps=eps, kappa=kappa,
                                 cross_task=cross_task,
                                 uniform_cross=uniform_cross)
@@ -499,12 +629,13 @@ def matu_round_slots_ref(unified: jax.Array, slot_masks: jax.Array,
     # so it is accumulated once per task ((T, dc) work) and gathered per
     # slot after the loop — not recomputed per (client, slot).
     def pass2(c, carry):
-        tv_buf, uni_buf, dmask_buf, num_t, den = carry
+        tv_buf, uni_buf, dmask_buf, num_p, den_p = carry
         off = c * chunk
         tau = jax.lax.dynamic_slice_in_dim(tau_hats, off, chunk, axis=1)
         m_hat = jax.lax.dynamic_slice_in_dim(m_hats, off, chunk, axis=1)
         tv = c1 * tau + c2 * (m_hat * (norm_w @ tau))
-        num_t = num_t + jnp.sum(jnp.abs(tv), axis=1)
+        num_p = jax.lax.dynamic_update_slice_in_dim(
+            num_p, _block_partials(jnp.abs(tv)), c * blkc, axis=1)
         x = jnp.take(tv, ids_c, axis=0).reshape(n, k, chunk)
         xm = x * vf_nk[:, :, None]
         sigma = jnp.sign(jnp.sum(xm, axis=1))                  # (N, dc)
@@ -513,22 +644,25 @@ def matu_round_slots_ref(unified: jax.Array, slot_masks: jax.Array,
         mu = jnp.max(jax.nn.relu(xm * sigma[:, None, :]), axis=1)
         tau_n = sigma * mu
         dmask = (x * tau_n[:, None, :] > 0) & (vf_nk[:, :, None] > 0)
-        den_c = jnp.sum(jnp.where(dmask, jnp.abs(tau_n)[:, None, :], 0.0),
-                        axis=2)
+        den_c = _block_partials(
+            jnp.where(dmask, jnp.abs(tau_n)[:, None, :], 0.0))
         tv_buf = jax.lax.dynamic_update_slice_in_dim(tv_buf, tv, off, axis=1)
         uni_buf = jax.lax.dynamic_update_slice_in_dim(uni_buf, tau_n, off,
                                                       axis=1)
         dmask_buf = jax.lax.dynamic_update_slice_in_dim(dmask_buf, dmask, off,
                                                         axis=2)
-        return tv_buf, uni_buf, dmask_buf, num_t, den + den_c
+        den_p = jax.lax.dynamic_update_slice_in_dim(den_p, den_c, c * blkc,
+                                                    axis=2)
+        return tv_buf, uni_buf, dmask_buf, num_p, den_p
 
-    tv_buf, uni_buf, dmask_buf, num_t, den = jax.lax.fori_loop(
+    tv_buf, uni_buf, dmask_buf, num_p, den_p = jax.lax.fori_loop(
         0, dp // chunk, pass2,
         (jnp.zeros((n_tasks, dp), jnp.float32),
          jnp.zeros((n, dp), jnp.float32),
          jnp.zeros((n, k, dp), bool),
-         jnp.zeros((n_tasks,), jnp.float32),
-         jnp.zeros((n, k), jnp.float32)))
+         jnp.zeros((n_tasks, n_blk), jnp.float32),
+         jnp.zeros((n, k, n_blk), jnp.float32)))
+    num_t, den = _lam_totals((num_p, den_p), axis_name, axis_sizes)
     num = num_t[ids_c].reshape(n, k) * vf_nk
 
     return (tv_buf[:, :d], tau_hats[:, :d], m_hats[:, :d],

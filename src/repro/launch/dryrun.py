@@ -47,8 +47,9 @@ PyTree = Any
 # ---------------------------------------------------------------------------
 
 _COLL_RE = re.compile(
-    r"(\w[\w.\-]*)\s*=\s*((?:[a-z0-9_]+\[[^\]]*\]|\([^)]*\)))\s*"
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+    r"%?(\w[\w.\-]*)\s*=\s*((?:[a-z0-9_]+\[[^\]]*\](?:\{[^}]*\})?|\([^)]*\)))"
+    r"\s*%?(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)")
 
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 
@@ -271,6 +272,90 @@ def run_matu_round(mesh, *, n_clients: int = 30, n_tasks: int = 30,
     return res
 
 
+def run_round_engine(mesh, *, n_clients: int = 32, n_tasks: int = 30,
+                     d: int = 1 << 27, k_max: int = 4,
+                     verbose: bool = True):
+    """Lower + compile the taskvec-sharded round ENGINE (shard_map over
+    ``ops.matu_round_slots_packed``) on the production mesh with no real
+    buffers: ShapeDtypeStructs carry the d-axis NamedShardings the
+    engine's pack path would install.  Reports the per-shard slot-buffer
+    bytes (the wire tensors each chip actually holds) next to the
+    compiled memory/cost/collective numbers the model dry-runs emit —
+    the d axis shards over every mesh axis, so the only collectives are
+    the two all-reduces of the sharding contract (the (T, T) similarity
+    dots + the λ block-tree roots)."""
+    from repro.core.engine import (EngineConfig, RoundEngine,
+                                   _round_up_pow2, pad_d_for_shards)
+    from repro.kernels import bitpack
+    from repro.nn.sharding import taskvec_sharding
+
+    t0 = time.time()
+    eng = RoundEngine(EngineConfig(n_tasks=n_tasks), mesh=mesh)
+    n_max = _round_up_pow2(n_clients)
+    k_pad = _round_up_pow2(k_max)
+    d_pad = pad_d_for_shards(d, eng.n_shards)
+    dw = bitpack.packed_width(d_pad)
+    rep = NamedSharding(mesh, P())
+    args = (
+        jax.ShapeDtypeStruct((n_max, d_pad), jnp.bfloat16,
+                             sharding=taskvec_sharding(mesh, 2)),
+        jax.ShapeDtypeStruct((n_max, k_pad, dw), jnp.uint32,
+                             sharding=taskvec_sharding(mesh, 3)),
+        jax.ShapeDtypeStruct((n_max, k_pad), jnp.float32, sharding=rep),
+        jax.ShapeDtypeStruct((n_max, k_pad), jnp.float32, sharding=rep),
+        jax.ShapeDtypeStruct((n_max, k_pad), jnp.bool_, sharding=rep),
+        jax.ShapeDtypeStruct((n_max, k_pad), jnp.int32, sharding=rep),
+    )
+    with mesh:
+        lowered = eng._impl("ref", d).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):      # older jax: list per module
+        cost = cost[0] if cost else {}
+    coll = collective_bytes(compiled.as_text())
+
+    # the wire slot buffers each shard holds (uplink; the downlink
+    # mirrors them) — d-axis tensors split n_shards ways, per-slot
+    # scalars replicated
+    sharded = 2 * n_max * d_pad + 4 * n_max * k_pad * dw
+    replicated = (4 + 4 + 1 + 4) * n_max * k_pad
+    per_shard = sharded // eng.n_shards + replicated
+    res = {
+        "arch": "matu-round-engine",
+        "shape": f"N{n_clients}_T{n_tasks}_d{d}_k{k_max}",
+        "mesh": dict(mesh.shape), "status": "ok",
+        "taskvec_shards": eng.n_shards,
+        "d_pad": d_pad,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "slot_buffer_bytes_per_shard": per_shard,
+        "slot_buffer_bytes_total": sharded + replicated * eng.n_shards,
+        "memory_per_device": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": mem.temp_size_in_bytes + mem.argument_size_in_bytes,
+        },
+        "cost": {"flops": cost.get("flops") if cost else None,
+                 "bytes_accessed": cost.get("bytes accessed") if cost else None},
+        "collective_bytes_per_device": coll,
+        "devices": mesh.size,
+    }
+    if verbose:
+        m = res["memory_per_device"]
+        print(f"[matu-round-engine N={n_clients} T={n_tasks} "
+              f"d=2^{d.bit_length()-1} x {tuple(mesh.shape.values())}] "
+              f"shards={eng.n_shards} "
+              f"slot-buf/shard={per_shard/2**20:.1f}MiB "
+              f"args/dev={m['argument_bytes']/2**20:.1f}MiB "
+              f"temp/dev={m['temp_bytes']/2**20:.1f}MiB "
+              f"coll={{{', '.join(f'{k}:{v/2**10:.1f}KiB' for k, v in coll.items())}}}")
+    return res
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -279,6 +364,9 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--matu-round", action="store_true",
                     help="lower the MaTU server aggregation itself")
+    ap.add_argument("--engine-round", action="store_true",
+                    help="lower the taskvec-sharded round ENGINE "
+                         "(shard_map + wire-format slot tensors)")
     ap.add_argument("--matu-d", type=int, default=1 << 27)
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--seq", type=int, default=None)
@@ -292,6 +380,13 @@ def main():
     if args.matu_round:
         r = run_matu_round(mesh, d=args.matu_d)
         with open(os.path.join(args.out, f"matu_round__{tag}.json"), "w") as f:
+            json.dump(r, f, indent=2)
+        return
+
+    if args.engine_round:
+        r = run_round_engine(mesh, d=args.matu_d)
+        with open(os.path.join(args.out, f"engine_round__{tag}.json"),
+                  "w") as f:
             json.dump(r, f, indent=2)
         return
 

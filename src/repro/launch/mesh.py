@@ -21,17 +21,42 @@ HBM_BW = 819e9                 # B/s
 ICI_BW = 50e9                  # B/s per link
 
 
+def _make_mesh(shape, axes, devices=None):
+    """jax.make_mesh across jax versions: newer jaxes take axis_types
+    (pass Auto so GSPMD stays in charge); 0.4.x has neither the kwarg
+    nor the enum and defaults to the same behaviour."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        kwargs["axis_types"] = (axis_type.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kwargs)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CI-scale sharding tests (8 host devices)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
+
+
+def make_round_mesh(n_devices: Optional[int] = None):
+    """1-D ("data",) mesh over the first ``n_devices`` local devices for
+    the taskvec-sharded round engine (benches / single-host serving).
+    The "taskvec" rule maps onto ("pod", "data", "model"), so on this
+    mesh the d axis splits ``n_devices`` ways; on the production pod
+    meshes the same rule spans all 256/512 chips."""
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    if n > len(devs):
+        raise ValueError(f"make_round_mesh: {n} devices requested, "
+                         f"{len(devs)} available")
+    return _make_mesh((n,), ("data",), devices=devs[:n])
 
 
 def arch_rules(cfg, mesh) -> Mapping[str, object]:

@@ -167,6 +167,53 @@ def logical_to_sharding(axes_tree: PyTree, shapes_tree: Optional[PyTree] = None,
     )
 
 
+# -- taskvec axis (MaTU sharded round engine) -------------------------------
+# The flattened-d server math shards over every mesh axis the "taskvec"
+# rule names; these helpers are the single place the engine asks "how
+# is the d axis laid out on this mesh".
+
+def taskvec_axes(mesh: Optional[Mesh] = None, *,
+                 rules: Optional[Mapping[str, Any]] = None
+                 ) -> Tuple[str, ...]:
+    """Mesh axes the ``taskvec`` logical axis shards over, major→minor
+    (only axes present in the mesh).  Empty tuple = replicated."""
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return ()
+    rules = rules or _CTX.rules
+    mapped = rules.get("taskvec")
+    if mapped is None:
+        return ()
+    if isinstance(mapped, str):
+        mapped = (mapped,)
+    return tuple(a for a in mapped if a in mesh.shape)
+
+
+def taskvec_shards(mesh: Optional[Mesh] = None, *,
+                   rules: Optional[Mapping[str, Any]] = None) -> int:
+    """Number of d-axis shards the taskvec rule yields on this mesh."""
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return 1
+    axes = taskvec_axes(mesh, rules=rules)
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def taskvec_sharding(mesh: Mesh, ndim: int, *,
+                     rules: Optional[Mapping[str, Any]] = None
+                     ) -> NamedSharding:
+    """NamedSharding placing an ndim-rank tensor with its LAST axis
+    split over the taskvec mesh axes (all other axes replicated) — the
+    layout of every d-axis slot tensor in the sharded round engine."""
+    axes = taskvec_axes(mesh, rules=rules)
+    last: Any = None
+    if len(axes) == 1:
+        last = axes[0]
+    elif axes:
+        last = axes
+    return NamedSharding(mesh, P(*([None] * (ndim - 1) + [last])))
+
+
 def constrain(x: jax.Array, logical: LogicalAxes) -> jax.Array:
     """with_sharding_constraint under the active mesh; no-op otherwise."""
     mesh = _CTX.mesh

@@ -113,6 +113,27 @@ def test_comm_o1_vs_ok(setting):
     assert bits[("matu", 3)] < bits[("fedavg", 3)]
 
 
+def test_history_mean_downlink_bits(setting):
+    """History.mean_downlink_bits mirrors mean_uplink_bits: 0.0 on an
+    empty history, the mean of the measured per-round downlink wire
+    bits once MaTU has run (its downlink tensors are measured, so the
+    mean must be positive and match the raw column)."""
+    from repro.fed.simulator import History
+
+    assert History().mean_downlink_bits == 0.0
+    con, _split, bb, cfg = setting
+    from repro.data.dirichlet import dirichlet_split as ds
+    split = ds(n_clients=5, n_tasks=N_TASKS, n_classes=6, zeta_t=0.5,
+               tasks_per_client=2, seed=2)
+    sim = FedSimulator(FedConfig(rounds=2, local_steps=2, eval_every=1),
+                       con, split, bb, MaTUStrategy(N_TASKS, bb.d))
+    h = sim.run()
+    assert h.downlink_bits_per_round and all(
+        b > 0 for b in h.downlink_bits_per_round)
+    assert h.mean_downlink_bits == pytest.approx(
+        float(np.mean(h.downlink_bits_per_round)))
+
+
 def test_ntk_linearized_trainer_runs(setting):
     h, _ = _run(setting, NTKFedAvgStrategy)
     assert h.final_mean_acc > 1.0 / N_TASKS  # learns something

@@ -20,13 +20,12 @@ SCRIPT = textwrap.dedent("""
     import jax.numpy as jnp
     from repro.configs.base import SHAPES, input_specs, load_arch
     from repro.launch.dryrun import batch_shardings, collective_bytes, opt_state_shardings
-    from repro.launch.mesh import arch_rules
+    from repro.launch.mesh import arch_rules, make_debug_mesh
     from repro.nn.sharding import logical_to_sharding, mesh_context
     from repro.optim import adamw
     from repro.train.trainer import make_train_step
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_debug_mesh((4, 2))
     cfg = load_arch("{arch}").reduced()
     shape = SHAPES["train_4k"]
     with mesh_context(mesh, arch_rules(cfg, mesh)):

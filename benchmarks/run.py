@@ -3,11 +3,16 @@ roofline.  Prints ``name,us_per_call,derived`` CSV; detail JSON lands in
 results/bench/.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
-                                            [--devices N]
+                                            [--devices N] [--code-masks]
 
 ``--devices N`` forces N host devices (XLA_FLAGS, set before any jax
 import) so benches with a sharded leg (round_engine) can A/B the
 taskvec-sharded engine against the single-device one on a CPU host.
+
+``--code-masks`` adds the entropy-coded mask-wire A/B leg to benches
+that take a ``code_masks`` kwarg (round_engine): coded uploads +
+coded downlink streams, with the measured coded/raw uplink ratio
+emitted as a row and recorded in results/bench/round_engine.json.
 """
 
 from __future__ import annotations
@@ -40,6 +45,9 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=1,
                     help="force N host devices; benches that take a "
                          "``devices`` kwarg add a sharded A/B leg")
+    ap.add_argument("--code-masks", action="store_true",
+                    help="add the entropy-coded mask-wire A/B leg to "
+                         "benches that take a ``code_masks`` kwarg")
     args = ap.parse_args()
 
     if args.devices > 1:
@@ -58,8 +66,11 @@ def main() -> None:
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
             kw = {}
-            if "devices" in inspect.signature(mod.run).parameters:
+            params = inspect.signature(mod.run).parameters
+            if "devices" in params:
                 kw["devices"] = args.devices
+            if "code_masks" in params:
+                kw["code_masks"] = args.code_masks
             out = mod.run(quick=args.quick, **kw)
             for row in out["rows"]:
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")

@@ -12,6 +12,15 @@ A client holds k_n tasks.  Each round it:
 Communication accounting (bits/round, as in Tables 1–2):
   uplink  = 32·d  +  k·(d + 32)      [fp32 vector + k binary masks + k scalars]
 vs an adapter-per-task scheme's 32·k·d.
+
+Mask transport layouts — ``masks`` on an upload/downlink is one of:
+
+* dense bool ``(k, d)`` — the paper's accounting (32d + k(d+32));
+* bit-packed uint32 words ``(k, ceil(d/32))`` — the raw packed wire
+  (``repro.kernels.bitpack``), measured off buffer sizes;
+* an entropy-coded uint8 byte stream (1-D) — the Golomb-Rice wire
+  (``repro.fed.compression``), k self-delimiting row records; bits are
+  measured off the actual stream length.
 """
 
 from __future__ import annotations
@@ -21,6 +30,7 @@ from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.unify import modulate, unify_with_modulators
 
@@ -35,9 +45,14 @@ def paper_link_bits(d: int, k: int, float_bits: int = 32) -> int:
 
 def _link_bits(unified: jax.Array, masks: jax.Array, k: int,
                float_bits: int) -> int:
-    """Shared up/downlink accounting: measured packed wire bits when
-    the masks travel as uint32 words, the paper formula otherwise."""
+    """Shared up/downlink accounting: measured coded stream bits for an
+    entropy-coded uint8 wire, measured packed wire bits when the masks
+    travel as uint32 words, the paper formula otherwise."""
     d = int(unified.shape[0])
+    if masks.dtype == jnp.uint8:
+        # vector buffer + the actual coded byte stream + k scalers
+        return (8 * unified.dtype.itemsize * d + 8 * int(masks.size)
+                + k * float_bits)
     if masks.dtype == jnp.uint32:
         from repro.kernels.bitpack import wire_bits
         return wire_bits(d, k, vec_bytes_per_elem=unified.dtype.itemsize,
@@ -45,13 +60,19 @@ def _link_bits(unified: jax.Array, masks: jax.Array, k: int,
     return paper_link_bits(d, k, float_bits)
 
 
-def _masks_dense(unified: jax.Array, masks: jax.Array) -> jax.Array:
+def _masks_dense(unified: jax.Array, masks: jax.Array,
+                 k: Optional[int] = None) -> jax.Array:
     """Dense bool (k, d) view of modulator masks, whichever layout they
-    travel in (the single ``ops.unpack_masks`` contract)."""
+    travel in (the single ``ops.unpack_masks`` contract; coded streams
+    decode host-side first — ``k`` is required for them)."""
+    d = int(unified.shape[0])
+    if masks.dtype == jnp.uint8:
+        from repro.fed.compression import decode_mask_rows
+        masks = jnp.asarray(decode_mask_rows(np.asarray(masks), d, k))
     if masks.dtype != jnp.uint32:
         return masks
     from repro.kernels import ops
-    return ops.unpack_masks(masks, int(unified.shape[0]))
+    return ops.unpack_masks(masks, d)
 
 
 @dataclass
@@ -59,21 +80,32 @@ class ClientUpload:
     client_id: int
     task_ids: List[int]
     unified: jax.Array          # (d,) fp32 | bf16 (wire)
-    masks: jax.Array            # (k, d) bool | (k, ceil(d/32)) uint32 (wire)
+    masks: jax.Array            # (k, d) bool | (k, ceil(d/32)) uint32 | uint8 stream
     lams: jax.Array             # (k,)
     data_sizes: List[int]
+    _dense: Optional[jax.Array] = field(default=None, repr=False,
+                                        compare=False)
 
     @property
     def packed(self) -> bool:
         return self.masks.dtype == jnp.uint32
 
+    @property
+    def coded(self) -> bool:
+        """True when ``masks`` is the entropy-coded uint8 byte stream."""
+        return self.masks.dtype == jnp.uint8
+
     def masks_dense(self) -> jax.Array:
-        return _masks_dense(self.unified, self.masks)
+        if self._dense is None:
+            self._dense = _masks_dense(self.unified, self.masks,
+                                       len(self.task_ids))
+        return self._dense
 
     def uplink_bits(self, float_bits: int = 32) -> int:
         """Uplink size in bits.  For wire-format uploads this is
-        *measured* off the actual buffers (bf16 vector + packed words);
-        for legacy bool uploads it is the paper's 32d + k(d+32)."""
+        *measured* off the actual buffers (bf16 vector + packed words,
+        or the entropy-coded byte stream); for legacy bool uploads it
+        is the paper's 32d + k(d+32)."""
         return _link_bits(self.unified, self.masks, len(self.task_ids),
                           float_bits)
 
@@ -81,19 +113,44 @@ class ClientUpload:
 @dataclass
 class ClientDownlink:
     unified: jax.Array          # (d,) fp32 | bf16 (wire)
-    masks: jax.Array            # (k, d) bool | (k, ceil(d/32)) uint32 (wire)
+    masks: jax.Array            # (k, d) bool | (k, ceil(d/32)) uint32 | uint8 stream
     lams: jax.Array             # (k,)
+    _words: Optional[jax.Array] = field(default=None, repr=False,
+                                        compare=False)
 
     @property
     def packed(self) -> bool:
         return self.masks.dtype == jnp.uint32
 
+    @property
+    def coded(self) -> bool:
+        """True when ``masks`` is the entropy-coded uint8 byte stream."""
+        return self.masks.dtype == jnp.uint8
+
+    def _decoded_words(self) -> jax.Array:
+        """Coded stream → (k, ceil(d/32)) packed words, decoded once
+        and cached — the 32x-smaller layout every consumer accepts."""
+        if self._words is None:
+            from repro.fed.compression import decode_mask_rows
+            self._words = jnp.asarray(decode_mask_rows(
+                np.asarray(self.masks), int(self.unified.shape[0]),
+                int(self.lams.shape[0])))
+        return self._words
+
     def masks_dense(self) -> jax.Array:
-        return _masks_dense(self.unified, self.masks)
+        masks = self._decoded_words() if self.coded else self.masks
+        return _masks_dense(self.unified, masks)
+
+    def mask_row(self, i: int) -> jax.Array:
+        """Row ``i`` of the modulator masks in a ``modulate``-ready
+        layout: the packed word row / bool row directly; the coded wire
+        decodes to packed words once (cached), never to dense bools."""
+        return (self._decoded_words()[i] if self.coded
+                else self.masks[i])
 
     def downlink_bits(self, float_bits: int = 32) -> int:
         return _link_bits(self.unified, self.masks,
-                          int(self.masks.shape[0]), float_bits)
+                          int(self.lams.shape[0]), float_bits)
 
 
 class MaTUClient:
@@ -102,12 +159,14 @@ class MaTUClient:
 
     def __init__(self, client_id: int, task_ids: List[int],
                  data_sizes: List[int], d: int,
-                 trainer: Callable[[int, jax.Array, jax.Array], jax.Array]):
+                 trainer: Callable[[int, jax.Array, jax.Array], jax.Array],
+                 code_masks: bool = False):
         self.client_id = client_id
         self.task_ids = list(task_ids)
         self.data_sizes = list(data_sizes)
         self.d = d
         self.trainer = trainer
+        self.code_masks = code_masks
         self.state: Optional[ClientDownlink] = None
 
     def task_vector_init(self, task_index: int) -> jax.Array:
@@ -115,7 +174,7 @@ class MaTUClient:
         if self.state is None:
             return jnp.zeros((self.d,), jnp.float32)
         return modulate(self.state.unified,
-                        self.state.masks[task_index],
+                        self.state.mask_row(task_index),
                         self.state.lams[task_index])
 
     def run_round(self, rng: jax.Array) -> ClientUpload:
@@ -125,6 +184,16 @@ class MaTUClient:
             tvs.append(self.trainer(t, self.task_vector_init(i), sub))
         stacked = jnp.stack(tvs)
         unified, masks, lams = unify_with_modulators(stacked)
+        if self.code_masks:
+            # wire boundary: entropy-code the fresh modulator masks and
+            # ship the bf16 vector — the server decodes at pack time
+            from repro.fed.compression import encode_mask_rows
+            from repro.kernels.bitpack import pack_bits_np
+            stream = encode_mask_rows(pack_bits_np(np.asarray(masks)),
+                                      self.d)
+            return ClientUpload(self.client_id, self.task_ids,
+                                unified.astype(jnp.bfloat16),
+                                jnp.asarray(stream), lams, self.data_sizes)
         return ClientUpload(self.client_id, self.task_ids, unified,
                             masks, lams, self.data_sizes)
 

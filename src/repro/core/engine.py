@@ -72,6 +72,22 @@ The bool/fp32 slot layout is retained behind ``pack_uploads(...,
 packed=False)`` as the A/B baseline and parity oracle
 (``benchmarks/bench_round_engine.py`` measures both).
 
+**Entropy-coded layer (optional, host edge only).**  On top of the
+packed words sits an invertible Golomb-Rice coder
+(:mod:`repro.fed.compression`): each mask row becomes one
+self-describing record — a 5-byte header (polarity bit, raw-escape
+bit, 5-bit Rice parameter, uint32 run count) followed by the Rice
+payload (unary quotients then fixed-width remainders, LSB-first,
+byte-padded), or the raw packed words verbatim when Rice would expand
+(so coded ≤ raw + header at any density).  Decode needs only ``d`` and
+the bytes.  The coded layer never enters the jitted round:
+``pack_uploads`` decodes coded (uint8) uploads into slot words at the
+host edge, and ``RoundEngine.downlinks(code_masks=True)`` encodes the
+downlink rows back to streams; biased modulator masks (P(1) ≈ 0.75 on
+own tasks) go out at ~0.82 bits/coord, measured off the actual byte
+streams.  ``code_masks=False`` (default) keeps the raw packed wire as
+the A/B toggle.
+
 The slot layout keeps the packed footprint and the round's work at
 O(Σ k_n · d) — the same asymptotics as the legacy ragged loop — while
 the dense (N, T, ·) tensors the Pallas kernels and ``matu_round``
@@ -334,6 +350,12 @@ def pack_uploads(uploads: Sequence[ClientUpload], n_tasks: int, *,
         k = len(up.task_ids)
         unified[i, :d] = np.asarray(up.unified)
         m = np.asarray(up.masks)
+        if m.dtype == np.uint8:
+            # entropy-coded wire stream: decode to packed words here at
+            # the host edge (repro.fed.compression) — the jitted round
+            # never sees the coded layer
+            from repro.fed.compression import decode_mask_rows
+            m = decode_mask_rows(m, d, k)
         if packed:
             # accept either bool masks (legacy clients — packed here at
             # the wire boundary) or already-packed words
@@ -508,29 +530,47 @@ class RoundEngine:
         return EngineOutput(tv, tau, sim, du, dm, dl,
                             rho=self.cfg.rho, m_hats_dense=m_hats)
 
-    def downlinks(self, packed: PackedRound,
-                  out: EngineOutput) -> Dict[int, ClientDownlink]:
+    def downlinks(self, packed: PackedRound, out: EngineOutput, *,
+                  code_masks: bool = False) -> Dict[int, ClientDownlink]:
         """Slice the batched downlink tensors back to ragged per-client
         ClientDownlinks (views, no compute).  Mask rows stay in the
-        packed wire format; clients unpack on use (``modulate``)."""
+        packed wire format; clients unpack on use (``modulate``).
+
+        With ``code_masks`` each client's mask rows are entropy-coded
+        at this host edge into one self-describing uint8 stream (the
+        Golomb-Rice wire layer, ``repro.fed.compression``); clients
+        decode on use (``ClientDownlink.mask_row``) and downlink bits
+        are measured off the actual stream."""
+        if code_masks:
+            from repro.fed.compression import encode_mask_rows
+            down_masks = np.asarray(out.down_masks)
+            if down_masks.dtype != np.uint32:     # bool A/B layout
+                down_masks = bitpack.pack_bits_np(down_masks)
         result: Dict[int, ClientDownlink] = {}
         for i, cid in enumerate(packed.client_ids):
             k = len(packed.task_ids[i])
-            result[cid] = ClientDownlink(out.down_unified[i],
-                                         out.down_masks[i, :k],
+            if code_masks:
+                rows = jnp.asarray(encode_mask_rows(down_masks[i, :k],
+                                                    packed.d))
+            else:
+                rows = out.down_masks[i, :k]
+            result[cid] = ClientDownlink(out.down_unified[i], rows,
                                          out.down_lams[i, :k])
         return result
 
     def round(self, uploads: Sequence[ClientUpload], *,
-              mode: Optional[str] = None, packed: bool = True
+              mode: Optional[str] = None, packed: bool = True,
+              code_masks: bool = False
               ) -> Tuple[Dict[int, ClientDownlink], EngineOutput]:
         """Pack → run → unpack: the drop-in replacement for the legacy
         per-task Python loop in ``MaTUServer.round``.  ``packed=False``
-        runs the bool/fp32 A/B layout."""
+        runs the bool/fp32 A/B layout; ``code_masks=True`` emits
+        entropy-coded downlink masks (coded uploads are accepted and
+        decoded by ``pack_uploads`` regardless of this flag)."""
         batch = pack_uploads(uploads, self.cfg.n_tasks, packed=packed,
                              mesh=self.mesh)
         out = self.run_packed(batch, mode=mode)
-        return self.downlinks(batch, out), out
+        return self.downlinks(batch, out, code_masks=code_masks), out
 
 
 def _slice_outputs(out: tuple, d: int, packed: bool) -> tuple:

@@ -58,18 +58,22 @@ class MaTUServer:
         """Install (or clear) the taskvec mesh on the round engine."""
         self.engine.use_mesh(mesh)
 
-    def round(self, uploads: List[ClientUpload]) -> Dict[int, ClientDownlink]:
-        """One server step through the batched round engine."""
-        downs, out = self.engine.round(uploads)
+    def round(self, uploads: List[ClientUpload], *,
+              code_masks: bool = False) -> Dict[int, ClientDownlink]:
+        """One server step through the batched round engine.
+        ``code_masks`` emits entropy-coded downlink mask streams
+        (coded uploads are decoded at pack time either way)."""
+        downs, out = self.engine.round(uploads, code_masks=code_masks)
         self._record(out)
         return downs
 
-    def round_packed(self, packed: PackedRound) -> Dict[int, ClientDownlink]:
+    def round_packed(self, packed: PackedRound, *,
+                     code_masks: bool = False) -> Dict[int, ClientDownlink]:
         """Server step over an already-packed batch (the strategy's
         pre-packed upload path — skips ``pack_uploads`` entirely)."""
         out = self.engine.run_packed(packed)
         self._record(out)
-        return self.engine.downlinks(packed, out)
+        return self.engine.downlinks(packed, out, code_masks=code_masks)
 
     def _record(self, out: EngineOutput) -> None:
         self.last_similarity = out.similarity

@@ -1,41 +1,72 @@
-"""Beyond-paper: uplink compression for MaTU (EXPERIMENTS.md §Perf-comm).
+"""Entropy-coded mask transport for MaTU (EXPERIMENTS.md §Perf-comm).
 
-The paper transmits, per client per round, one fp32 unified vector +
-per task a dense binary mask + a scalar: 32d + k(d + 32) bits.  Two
-orthogonal, lossless-or-bounded reductions (both techniques the paper
-itself cites as related work — DeltaMask, Tsouvalas et al. 2023):
+The paper transmits, per client per round, one unified vector + per
+task a dense binary mask + a scalar (Sec. 5.3).  Since the wire-format
+engine refactor every MaTU round actually ships bf16 unified vectors
+and bit-packed uint32 mask words (1 bit/coord; see the
+``repro.core.engine`` wire-format contract) — this module is the layer
+BELOW that: an actual, invertible entropy coder over the packed words,
+so the biased modulator masks (P(1) ≈ 0.75 on a client's own tasks —
+the regime DeltaMask, Tsouvalas et al. 2023, targets) go out well
+under 1 bit/coord.
 
-1. **Entropy-coded masks.**  The modulator masks are heavily biased:
-   m^t_j = (τ^t_j · τ_j > 0) holds for ~half the entries only when
-   tasks conflict; for a client's own tasks the empirical P(1) ≈ 0.75+.
-   An arithmetic coder reaches the entropy bound H(p)·d bits; we
-   account (and test) that bound and ship a simple, exactly invertible
-   run-length/Golomb fallback.
+Coder: vectorized Golomb-Rice over the gaps between the rarer symbol's
+positions, with a self-describing 5-byte header, so decode needs only
+``d`` and the byte stream.  Stream layout (everything little-endian,
+bit streams LSB-first — the same bit convention as
+``repro.kernels.bitpack``):
 
-2. **bf16 unified vector.**  Task vectors tolerate bf16 transport (the
-   server math is fp32 on arrival); 32d → 16d bits with measured
-   cosine > 0.999 to the fp32 vector on the testbed.
+  byte 0    bit 0: polarity  (1 → coded positions are the SET bits,
+                              0 → coded positions are the CLEAR bits)
+            bit 1: raw escape (1 → payload is the packed words
+                              verbatim, 4·ceil(d/32) bytes; the coder
+                              only emits this when the Rice payload
+                              would be larger, so coded ≤ raw + header
+                              at ANY density)
+            bits 3-7: Rice parameter k ∈ [0, 31]
+  bytes 1-4 uint32 run count n (number of coded positions)
+  payload   unary section: for each of the n gaps, ``gap >> k`` zero
+            bits then a one bit; THEN the remainder section: n·k bits,
+            the low k bits of each gap, LSB-first per symbol.  Padded
+            with zero bits to a byte boundary.
 
-Combined uplink: 16d + k(H(p)·d + 32) bits — another ~2.3× under the
-paper's own scheme at k = 2 (see bench_table2 detail + tests).
+Splitting unary and remainder bits into two sections (rather than
+interleaving per symbol) keeps decode fully vectorized: the first n
+one-bits of the payload are exactly the n unary terminators, so one
+``np.flatnonzero`` recovers every quotient and one reshape every
+remainder — no sequential bit walk.  The split is size-neutral.
 
-Since the wire-format engine refactor the bf16 vector and the 1-bit
-mask transport are not simulated — every MaTU round actually ships
-bf16 unified vectors and bit-packed uint32 mask words (see the
-``repro.core.engine`` wire-format contract), so the raw accounting
-(``repro.kernels.bitpack.wire_bits``, via ``ClientUpload.uplink_bits``)
-is measured off buffer sizes and the functions here quantify the
-*additional* entropy-coding headroom.
+Round-trip is bit-exact for any density — all-zero and all-one masks
+are 5-byte streams (n = 0), single-bit masks cost one gap — and is
+enforced by property tests over adversarial densities
+(tests/test_compression.py).
+
+Accounting is *measured*, not bounded: :func:`coded_mask_bits` /
+:func:`golomb_encode_bits` return 8× the actual stream length the
+decoder consumes (header included).  :func:`mask_entropy_bits` keeps
+the Shannon bound for comparison — the coder lands within a few
+percent of it away from p = 0.5 and escapes to raw near it.
+
+The bf16 unified-vector transport (32d → 16d bits, measured cosine
+> 0.999) is the other wire term; :func:`compressed_uplink_bits`
+combines both: 16d + Σ_k (coded mask stream + 32-bit scaler).
 """
 
 from __future__ import annotations
 
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels.bitpack import packed_width, pack_bits_np, unpack_bits_np
+
+HEADER_BYTES = 5
+_POLARITY_BIT = 0x01
+_RAW_BIT = 0x02
+_K_SHIFT = 3
 
 
 def mask_entropy_bits(mask: np.ndarray) -> float:
@@ -45,20 +76,166 @@ def mask_entropy_bits(mask: np.ndarray) -> float:
     return h * mask.size
 
 
+def _best_rice_k(gaps: np.ndarray) -> int:
+    """Rice parameter minimizing the exact payload bits, searched in a
+    window around the log2(mean gap) estimate (the optimum for the
+    geometric gap distribution of a Bernoulli mask lives there)."""
+    mean = float(gaps.mean())
+    k0 = max(0, int(math.log2(mean)) if mean >= 1.0 else 0)
+    best_k, best_bits = 0, None
+    for k in range(max(0, k0 - 3), min(31, k0 + 3) + 1):
+        bits = int(np.sum(gaps >> k)) + gaps.size * (k + 1)
+        if best_bits is None or bits < best_bits:
+            best_k, best_bits = k, bits
+    return best_k
+
+
+def rice_encode_words(words: np.ndarray, d: int) -> np.ndarray:
+    """Encode ONE packed mask row (``ceil(d/32)`` uint32 words, the
+    :mod:`repro.kernels.bitpack` layout) into a self-describing uint8
+    stream.  Exactly invertible by :func:`rice_decode_words` given only
+    ``d``; never more than ``HEADER_BYTES`` over the raw packed words
+    (the raw-escape mode)."""
+    words = np.ascontiguousarray(np.asarray(words, np.uint32).ravel())
+    if words.size != packed_width(d):
+        raise ValueError(f"rice_encode_words: {words.size} words != "
+                         f"packed_width({d}) = {packed_width(d)}")
+    bits = unpack_bits_np(words, d)
+    n_set = int(bits.sum())
+    polarity = 1 if 2 * n_set <= d else 0
+    positions = np.flatnonzero(bits if polarity else ~bits)
+    n = positions.size
+
+    raw_payload = words.astype("<u4").view(np.uint8)
+    if n == 0:
+        header = np.zeros(HEADER_BYTES, np.uint8)
+        header[0] = polarity
+        return header
+
+    gaps = np.diff(positions.astype(np.int64), prepend=-1) - 1
+    k = _best_rice_k(gaps)
+    qs = gaps >> k
+    unary_len = int(qs.sum()) + n
+    total_bits = unary_len + n * k
+    if -(-total_bits // 8) >= raw_payload.size:      # raw escape
+        header = np.zeros(HEADER_BYTES, np.uint8)
+        header[0] = polarity | _RAW_BIT
+        return np.concatenate([header, raw_payload])
+
+    stream_bits = np.zeros(total_bits, np.uint8)
+    stream_bits[np.cumsum(qs + 1) - 1] = 1           # unary terminators
+    if k:
+        rem = ((gaps[:, None] >> np.arange(k, dtype=np.int64)) & 1)
+        stream_bits[unary_len:] = rem.astype(np.uint8).ravel()
+    header = np.zeros(HEADER_BYTES, np.uint8)
+    header[0] = polarity | (k << _K_SHIFT)
+    header[1:5] = np.array([n], "<u4").view(np.uint8)
+    return np.concatenate([header,
+                           np.packbits(stream_bits, bitorder="little")])
+
+
+def rice_decode_words(stream: np.ndarray, d: int
+                      ) -> Tuple[np.ndarray, int]:
+    """Inverse of :func:`rice_encode_words`: ``(words, consumed_bytes)``
+    from a stream that may carry further rows after this one.  Needs
+    only ``d`` — polarity, Rice parameter, and run count come from the
+    header."""
+    stream = np.asarray(stream, np.uint8).ravel()
+    if stream.size < HEADER_BYTES:
+        raise ValueError("rice_decode_words: truncated header")
+    flags = int(stream[0])
+    polarity = flags & _POLARITY_BIT
+    w = packed_width(d)
+    # any single record is ≤ header + raw payload (the escape rule), so
+    # later rows in a multi-row stream never need to be unpacked here —
+    # keeps decode_mask_rows linear in the total stream length
+    stream = stream[:HEADER_BYTES + 4 * w]
+    if flags & _RAW_BIT:
+        end = HEADER_BYTES + 4 * w
+        words = stream[HEADER_BYTES:end].view("<u4").astype(np.uint32)
+        if words.size != w:
+            raise ValueError("rice_decode_words: truncated raw payload")
+        return words, end
+    k = flags >> _K_SHIFT
+    n = int(stream[1:5].view("<u4")[0])
+    if n == 0:
+        bits = np.zeros(d, bool) if polarity else np.ones(d, bool)
+        return pack_bits_np(bits), HEADER_BYTES
+
+    payload_bits = np.unpackbits(stream[HEADER_BYTES:], bitorder="little")
+    ones = np.flatnonzero(payload_bits)
+    if ones.size < n:
+        raise ValueError("rice_decode_words: truncated unary section")
+    ends = ones[:n]                                  # unary terminators
+    qs = np.diff(ends, prepend=-1) - 1
+    unary_len = int(ends[-1]) + 1
+    gaps = qs.astype(np.int64) << k
+    if k:
+        rem = payload_bits[unary_len:unary_len + n * k]
+        if rem.size < n * k:
+            raise ValueError("rice_decode_words: truncated remainders")
+        gaps += rem.reshape(n, k) @ (1 << np.arange(k, dtype=np.int64))
+    positions = np.cumsum(gaps + 1) - 1
+    if positions[-1] >= d:
+        raise ValueError("rice_decode_words: position beyond d")
+    bits = np.zeros(d, bool) if polarity else np.ones(d, bool)
+    bits[positions] = bool(polarity)
+    consumed = HEADER_BYTES + -(-(unary_len + n * k) // 8)
+    return pack_bits_np(bits), consumed
+
+
+def encode_mask_rows(words: np.ndarray, d: int) -> np.ndarray:
+    """Encode a ``(k, ceil(d/32))`` stack of packed mask rows (or one
+    1-D row) into one concatenated uint8 stream — each row's record is
+    self-delimiting, so :func:`decode_mask_rows` walks it with only
+    ``d`` and the row count."""
+    words = np.asarray(words, np.uint32)
+    if words.ndim == 1:
+        words = words[None]
+    parts = [rice_encode_words(row, d) for row in words]
+    return (np.concatenate(parts) if parts else np.zeros(0, np.uint8))
+
+
+def decode_mask_rows(stream: np.ndarray, d: int, k: int) -> np.ndarray:
+    """Inverse of :func:`encode_mask_rows` → ``(k, ceil(d/32))`` uint32
+    words, bit-identical to what was encoded."""
+    stream = np.asarray(stream, np.uint8).ravel()
+    out = np.empty((k, packed_width(d)), np.uint32)
+    off = 0
+    for i in range(k):
+        row, used = rice_decode_words(stream[off:], d)
+        out[i] = row
+        off += used
+    if off != stream.size:
+        raise ValueError(f"decode_mask_rows: {stream.size - off} trailing "
+                         f"bytes after {k} rows")
+    return out
+
+
+def coded_mask_bits(masks, d: int) -> int:
+    """Measured coded size (bits) of a mask stack in any layout the
+    stack travels in — packed uint32 words, dense bool rows, or an
+    already-coded uint8 stream (returned as-is)."""
+    m = np.asarray(masks)
+    if m.dtype == np.uint8:
+        return 8 * m.size
+    if m.dtype != np.uint32:
+        m = pack_bits_np(m.astype(bool))
+    return 8 * int(encode_mask_rows(m, d).size)
+
+
 def golomb_encode_bits(mask: np.ndarray) -> int:
-    """Exact bit count of a Golomb-Rice run-length code of the sparser
-    symbol (invertible; a practical stand-in for arithmetic coding)."""
+    """Measured bit count of the shipped Golomb-Rice stream for one
+    dense mask — 8× the byte length of :func:`rice_encode_words` on its
+    packed words, header (polarity + Rice parameter + run count)
+    included, so this is exactly what a decoder consumes.
+
+    (The pre-coder version of this function under-counted: it derived
+    the Golomb parameter from the data without transmitting it and
+    charged an all-ones mask 1 bit — undecodable accounting.  Kept
+    under its old name; it now delegates to the real coder.)"""
     flat = np.asarray(mask, bool).ravel()
-    p1 = flat.mean()
-    target = ~flat if p1 > 0.5 else flat          # encode the rarer symbol
-    p = max(float(target.mean()), 1e-9)
-    m = max(1, int(round(-1.0 / math.log2(max(1 - p, 1e-9)))))
-    k = max(0, int(math.ceil(math.log2(m))))
-    idx = np.flatnonzero(target)
-    gaps = np.diff(idx, prepend=-1) - 1
-    # each gap: unary quotient (gap//m + 1 bits) + k-bit remainder
-    bits = int(np.sum(gaps // m + 1 + k)) + 1     # +1 polarity bit
-    return bits
+    return 8 * int(rice_encode_words(pack_bits_np(flat), flat.size).size)
 
 
 def quantize_bf16_transport(v: jax.Array) -> jax.Array:
@@ -76,23 +253,32 @@ def quantize_bf16(v: jax.Array) -> Tuple[jax.Array, float]:
 
 
 def compressed_uplink_bits(unified: jax.Array, masks: jax.Array,
-                           *, use_entropy_bound: bool = False) -> int:
-    """Total uplink bits for one client under the compressed scheme.
-
-    Since the wire-format refactor the vector term is *measured* from
-    the actual transport buffer (bf16 → 16d bits; a legacy fp32 vector
-    is still accounted at the 16d bf16 transport it would use), and
-    ``masks`` may arrive either as dense bool rows or as the bit-packed
-    uint32 wire words the engine natively ships (unpacked here only to
-    evaluate the entropy coder, via the repo-wide bit convention).
-    """
+                           *, use_entropy_bound: bool = False,
+                           n_rows: Optional[int] = None) -> int:
+    """Total uplink bits for one client under the coded scheme:
+    16d (measured bf16 vector; a legacy fp32 vector is accounted at
+    the bf16 transport it would use) + per mask row the MEASURED coded
+    stream + a 32-bit scaler.  ``masks`` may be dense bool rows, the
+    bit-packed uint32 wire words, or an already-coded uint8 stream
+    (then its measured length is used directly, and ``n_rows`` must
+    say how many scalers ride along — matching
+    ``ClientUpload.uplink_bits`` on the same buffers).  With
+    ``use_entropy_bound`` the mask term is the Shannon bound instead —
+    the comparison axis, not a transmittable size."""
     d = int(unified.shape[0])
-    # 16d either way: measured for a bf16 wire upload, the simulated
-    # bf16 transport bound for a legacy fp32 vector
     total = 16 * d
     m = np.asarray(masks)
+    if m.dtype == np.uint8:
+        if n_rows is None:
+            raise ValueError("compressed_uplink_bits: an already-coded "
+                             "uint8 stream needs n_rows for the scaler "
+                             "accounting (or use ClientUpload.uplink_bits)")
+        if not use_entropy_bound:
+            return total + 8 * m.size + 32 * n_rows
+        # bound comparison asked for: decode back to rows and fall
+        # through to the Shannon term
+        m = decode_mask_rows(m, d, n_rows)
     if m.dtype == np.uint32:
-        from repro.kernels.bitpack import unpack_bits_np
         m = unpack_bits_np(m, d)
     if m.ndim == 1:
         m = m[None]
@@ -105,5 +291,6 @@ def compressed_uplink_bits(unified: jax.Array, masks: jax.Array,
 
 # Raw (uncoded) wire accounting lives in repro.kernels.bitpack.wire_bits
 # — the single definition ClientUpload.uplink_bits / ClientDownlink
-# .downlink_bits / PackedRound.wire_bits all delegate to.  This module
-# only quantifies the entropy-coding headroom on top of it.
+# .downlink_bits / PackedRound.wire_bits delegate to for the raw packed
+# layout; coded uploads/downlinks are accounted off their actual byte
+# streams (coded_mask_bits).

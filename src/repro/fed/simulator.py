@@ -42,7 +42,10 @@ class History:
     mean_acc: List[float] = field(default_factory=list)
     uplink_bits_per_round: List[int] = field(default_factory=list)
     # measured off the actual downlink wire buffers (bf16 vectors +
-    # bit-packed mask words) where the strategy has them; 0 otherwise
+    # bit-packed mask words, or the Golomb-Rice coded byte streams
+    # under MaTUStrategy(code_masks=True)) where the strategy has
+    # them; 0 otherwise.  Uplink bits follow the same rule — with the
+    # coded wire both columns are real coded stream lengths.
     downlink_bits_per_round: List[int] = field(default_factory=list)
 
     @property

@@ -152,7 +152,7 @@ class MaTUStrategy(Strategy):
     def __init__(self, n_tasks: int, d: int, *, rho: float = 0.4,
                  eps: float = 0.5, kappa: int = 3, cross_task: bool = True,
                  uniform_cross: bool = False, compress: bool = False,
-                 mesh=None):
+                 code_masks: bool = False, mesh=None):
         super().__init__(n_tasks, d)
         self.mesh = mesh
         self.server = MaTUServer(MaTUServerConfig(
@@ -160,7 +160,14 @@ class MaTUStrategy(Strategy):
             cross_task=cross_task, uniform_cross=uniform_cross), mesh=mesh)
         self.downlinks: Dict[int, ClientDownlink] = {}
         self.client_tasks: Dict[int, List[int]] = {}
-        # beyond-paper: bf16 vector + entropy-coded masks (repro.fed.compression)
+        # ``code_masks``: ship the Golomb-Rice entropy-coded mask wire
+        # both ways (repro.fed.compression) — uplink streams are built
+        # from the same packed words the engine computes on, downlink
+        # streams decoded by clients on use; up/downlink bits are then
+        # measured off the actual coded byte streams.  ``compress``
+        # (legacy accounting flag) swaps the UPLINK accounting for the
+        # coder's measured size without shipping the streams.
+        self.code_masks = code_masks
         self.compress = compress
         self._last_uploads: List[ClientUpload] = []
 
@@ -175,7 +182,7 @@ class MaTUStrategy(Strategy):
         if dl is None:
             return jnp.zeros((self.d,), jnp.float32)
         i = self.client_tasks[client_id].index(task_id)
-        return modulate(dl.unified, dl.masks[i], dl.lams[i])
+        return modulate(dl.unified, dl.mask_row(i), dl.lams[i])
 
     def aggregate(self, uploads: List[Upload]) -> None:
         self.aggregate_batch(RoundBatch.from_uploads(uploads, self.n_tasks))
@@ -197,12 +204,24 @@ class MaTUStrategy(Strategy):
                                  mask_words, lams, batch.slot_tasks,
                                  batch.valid, batch.slot_sizes, self.n_tasks,
                                  d=self.d, mesh=self.mesh)
-        self.downlinks.update(self.server.round_packed(packed))
+        self.downlinks.update(self.server.round_packed(
+            packed, code_masks=self.code_masks))
         dw = bitpack.packed_width(self.d)
+        if self.code_masks:
+            # the coded uplink: each client's packed word rows — the
+            # exact bytes the engine computes on — entropy-coded into
+            # one self-describing stream (decode needs only d)
+            from repro.fed.compression import encode_mask_rows
+            words_np = np.asarray(mask_words)
+            up_masks = [jnp.asarray(encode_mask_rows(
+                words_np[i, :len(u.task_ids), :dw], self.d))
+                for i, u in enumerate(batch.uploads)]
+        else:
+            up_masks = [mask_words[i, :len(u.task_ids), :dw]
+                        for i, u in enumerate(batch.uploads)]
         self._last_uploads = [
             ClientUpload(u.client_id, list(u.task_ids),
-                         unified[i, :self.d],
-                         mask_words[i, :len(u.task_ids), :dw],
+                         unified[i, :self.d], up_masks[i],
                          lams[i, :len(u.task_ids)], list(u.data_sizes))
             for i, u in enumerate(batch.uploads)
         ]
@@ -214,13 +233,14 @@ class MaTUStrategy(Strategy):
 
     def uplink_bits(self, uploads: List[Upload]) -> int:
         if self._last_uploads:
-            if self.compress:
-                # entropy-coded masks on top of the measured bf16 vector
+            if self.compress and not self.code_masks:
+                # accounting-only: the coder's measured size for masks
+                # that actually travelled as raw packed words
                 from repro.fed.compression import compressed_uplink_bits
                 return sum(compressed_uplink_bits(u.unified, u.masks)
                            for u in self._last_uploads)
-            # measured: the bits of the actual wire buffers
-            # (bf16 vector + packed mask words + fp32 scalers)
+            # measured: the bits of the actual wire buffers (bf16
+            # vector + packed words or coded streams + fp32 scalers)
             return sum(u.uplink_bits() for u in self._last_uploads)
         # paper accounting fallback (no wire buffers built yet):
         # ONE unified fp32 vector + per task (binary mask + scalar)

@@ -23,6 +23,13 @@ into two planes, ``pos = pack(x > 0)`` and ``nz = pos | pack(x < 0)``.
 The Eq. 5 sign dot becomes pure popcount algebra (see
 ``packed_sign_dots``), and Eq. 3 sign election becomes bitwise ANDs
 against the mask words.
+
+This word layout is also the substrate of the optional entropy-coded
+wire layer: :mod:`repro.fed.compression` Golomb-Rice codes whole rows
+of these words into self-describing byte streams (and decodes them
+back bit-identically) at the host edge — ``wire_bits`` here stays the
+single RAW packed accounting; coded streams are accounted off their
+measured byte length.
 """
 
 from __future__ import annotations

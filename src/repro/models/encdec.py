@@ -15,7 +15,8 @@ from typing import Any, List, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.lm import chunked_cross_entropy, cross_entropy
+from repro.models.lm import (chunked_cross_entropy, cross_entropy,
+                             grad_safe_barrier)
 from repro.nn.attention import Attention
 from repro.nn.mlp import GeluMLP
 from repro.nn.module import Dense, Embedding, LayerNorm, Module
@@ -236,7 +237,7 @@ class EncDecLM(Module):
             else:
                 (p,) = xs
                 l = None
-            x = jax.lax.optimization_barrier(x)
+            x = grad_safe_barrier(x)
             return self.dec_block(p, x, enc_out, lora=l, impl=impl), None
 
         if self.remat:

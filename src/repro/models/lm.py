@@ -27,6 +27,26 @@ from repro.nn.sharding import constrain
 PyTree = Any
 
 
+@jax.custom_jvp
+def grad_safe_barrier(x: jax.Array) -> jax.Array:
+    """``lax.optimization_barrier`` that survives differentiation.
+
+    The raw primitive has no differentiation rule (NotImplementedError
+    under ``jax.grad`` as of jax 0.4.37), which broke every LM train
+    step that scanned over a barrier'd loop body.  The barrier is an
+    identity, so the custom_jvp keeps the scheduling fence in the
+    primal while tangents pass straight through — the fence exists to
+    stop XLA hoisting weight-stack converts out of the scan, a concern
+    the (already fp32) tangents don't share.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+@grad_safe_barrier.defjvp
+def _grad_safe_barrier_jvp(primals, tangents):
+    return grad_safe_barrier(primals[0]), tangents[0]
+
+
 def cross_entropy(logits: jax.Array, labels: jax.Array,
                   ignore_index: int = -100) -> jax.Array:
     """Mean next-token CE in fp32; labels==ignore_index are masked."""
@@ -179,7 +199,7 @@ class LM(Module):
             # barrier: blocks XLA from hoisting bf16->f32 converts of the
             # loop-invariant weight stacks out of the scan (measured to
             # double the weight-stack footprint otherwise)
-            x = jax.lax.optimization_barrier(x)
+            x = grad_safe_barrier(x)
             x = constrain(x, ("batch", "act_seq", "embed"))
             aux = jnp.zeros((), jnp.float32)
             for name, blk in self.unit_blocks:

@@ -8,6 +8,7 @@ absence of NaNs.  The FULL configs are exercised via the dry-run only.
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.configs.base import ARCH_IDS, SHAPES, input_specs, load_arch
@@ -47,6 +48,38 @@ def test_reduced_forward_and_train_step(arch):
     assert moved > 0, f"{arch}: train step was a no-op"
     for leaf in jax.tree_util.tree_leaves(lora2):
         assert jnp.all(jnp.isfinite(leaf)), f"{arch}: NaN in updated LoRA"
+
+
+def test_scan_barrier_takes_grad():
+    """Regression: ``lax.optimization_barrier`` has no differentiation
+    rule (NotImplementedError under grad on jax ≤ 0.4.37), which failed
+    every train-step case above at seed.  ``grad_safe_barrier`` must be
+    an exact identity in both primal and gradient, under the same
+    remat + scan structure the LM uses."""
+    from repro.models.lm import grad_safe_barrier
+
+    x = jnp.arange(6.0).reshape(2, 3)
+    np.testing.assert_array_equal(np.asarray(grad_safe_barrier(x)),
+                                  np.asarray(x))
+    g = jax.grad(lambda v: jnp.sum(grad_safe_barrier(v) ** 2))(x)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(2 * x))
+
+    def scanned(v):
+        @jax.checkpoint
+        def body(c, _):
+            return jnp.sin(grad_safe_barrier(c)), None
+        out, _ = jax.lax.scan(body, v, None, length=3)
+        return jnp.sum(out)
+
+    def scanned_ref(v):
+        def body(c, _):
+            return jnp.sin(c), None
+        out, _ = jax.lax.scan(body, v, None, length=3)
+        return jnp.sum(out)
+
+    np.testing.assert_allclose(np.asarray(jax.grad(scanned)(x)),
+                               np.asarray(jax.grad(scanned_ref)(x)),
+                               rtol=1e-6)
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)

@@ -37,10 +37,20 @@ consumes the coded uploads (decoded at the host edge by
 uplink bits — the real-buffer evidence for the paper's comm-savings
 story (≤ 1.0 by construction: the coder escapes to raw + 5-byte
 header when Rice would expand).
+
+With ``--pipeline`` a coded multi-round A/B runs through
+``RoundEngine.round_stream``: pipelined (two-deep host/device overlap,
+double-buffered slot staging) vs the sequential escape hatch, per-round
+wall µs each, plus the ``us_host_codec`` / ``us_device_step`` split
+measured on the sequential leg (where the phases don't overlap, so
+they sum to the wall).  ``host_cores`` is recorded alongside: on a
+single-core host the pipeline has no second core to overlap onto and
+pipe ≈ seq — the column pair is the evidence either way.
 """
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -158,7 +168,8 @@ def _coded_uploads(wire):
     return out
 
 
-def run(quick: bool = False, devices: int = 1, code_masks: bool = False):
+def run(quick: bool = False, devices: int = 1, code_masks: bool = False,
+        pipeline: bool = False):
     grids = ([(8, 8, 1 << 14, 1, 2), (16, 16, 1 << 16, 2, 3)] if quick else
              [(16, 16, 1 << 16, 2, 3), (16, 30, 1 << 18, 2, 3),
               (32, 30, 1 << 20, 3, 4)])
@@ -240,11 +251,11 @@ def run(quick: bool = False, devices: int = 1, code_masks: bool = False):
                 us_engine_sharded=us_sharded,
                 speedup_sharded_vs_single=sh_ab)
 
+        coded = _coded_uploads(wire) if (code_masks or pipeline) else None
         if code_masks:
             # entropy-coded wire A/B: coded uploads in (decoded at the
             # host edge), coded downlink streams out; the ratio column
             # is measured off the actual byte streams, not a bound
-            coded = _coded_uploads(wire)
             coded_eng = RoundEngine(EngineConfig(n_tasks=n_tasks))
             leg = lambda: coded_eng.round(coded, code_masks=True)[0]  # noqa: E731
             _block_downlinks(leg())                     # warm caches
@@ -267,6 +278,47 @@ def run(quick: bool = False, devices: int = 1, code_masks: bool = False):
                 raw_mask_bits=raw_mask,
                 coded_mask_bits=coded_mask,
                 coded_mask_ratio=coded_mask / raw_mask)
+
+        if pipeline:
+            # pipelined vs sequential round_stream over the SAME coded
+            # rounds — per-round wall each, host-codec/device split from
+            # the sequential leg (phases don't overlap there, so
+            # pack+decode+encode+device sums to its wall)
+            pipe_eng = RoundEngine(EngineConfig(n_tasks=n_tasks))
+            n_rounds = 2 if quick else 4
+
+            def stream_wall(pipe_flag):
+                t0 = time.perf_counter()
+                phases = []
+                for downs, _out, ph in pipe_eng.round_stream(
+                        [coded] * n_rounds, code_masks=True,
+                        pipeline=pipe_flag):
+                    _block_downlinks(downs)
+                    phases.append(ph)
+                return (time.perf_counter() - t0) * 1e6 / n_rounds, phases
+
+            _block_downlinks(                            # warm caches
+                pipe_eng.round(coded, code_masks=True)[0])
+            us_stream_seq, seq_ph = stream_wall(False)
+            us_pipe, _pipe_ph = stream_wall(True)
+            us_codec = float(np.mean([ph.get("pack", 0.0)
+                                      + ph.get("decode", 0.0)
+                                      + ph.get("encode", 0.0)
+                                      for ph in seq_ph]))
+            us_dev = float(np.mean([ph["device"] for ph in seq_ph]))
+            rows.append((f"round_engine/{tag}/engine_pipelined", us_pipe,
+                         f"seq/pipe={us_stream_seq / us_pipe:.2f}x "
+                         f"codec={us_codec / 1e3:.0f}ms "
+                         f"dev={us_dev / 1e3:.0f}ms "
+                         f"cores={os.cpu_count()}"))
+            detail[tag].update(
+                us_engine_pipelined=us_pipe,
+                us_engine_stream_seq=us_stream_seq,
+                us_host_codec=us_codec,
+                us_device_step=us_dev,
+                speedup_pipelined_vs_seq=us_stream_seq / us_pipe,
+                pipeline_rounds=n_rounds,
+                host_cores=os.cpu_count())
 
     save_detail("round_engine", detail)
     return {"rows": rows, "detail": detail}

@@ -13,6 +13,11 @@ taskvec-sharded engine against the single-device one on a CPU host.
 that take a ``code_masks`` kwarg (round_engine): coded uploads +
 coded downlink streams, with the measured coded/raw uplink ratio
 emitted as a row and recorded in results/bench/round_engine.json.
+
+``--pipeline`` adds the pipelined-vs-sequential ``round_stream`` A/B
+leg (plus the ``us_host_codec``/``us_device_step`` split) to benches
+that take a ``pipeline`` kwarg (round_engine) — the one-command
+reproduction of the pipelined rows in round_engine.json.
 """
 
 from __future__ import annotations
@@ -48,6 +53,9 @@ def main() -> None:
     ap.add_argument("--code-masks", action="store_true",
                     help="add the entropy-coded mask-wire A/B leg to "
                          "benches that take a ``code_masks`` kwarg")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="add the pipelined round_stream A/B leg to "
+                         "benches that take a ``pipeline`` kwarg")
     args = ap.parse_args()
 
     if args.devices > 1:
@@ -71,6 +79,8 @@ def main() -> None:
                 kw["devices"] = args.devices
             if "code_masks" in params:
                 kw["code_masks"] = args.code_masks
+            if "pipeline" in params:
+                kw["pipeline"] = args.pipeline
             out = mod.run(quick=args.quick, **kw)
             for row in out["rows"]:
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")

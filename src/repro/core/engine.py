@@ -99,6 +99,48 @@ mode is resolved from the environment once per call (see
 ``ops.resolve_mode``) so ``REPRO_DISABLE_PALLAS`` /
 ``REPRO_PALLAS_INTERPRET`` A/B checks never collide in the cache.
 
+Host pipeline
+-------------
+``RoundEngine.round_stream`` runs a sequence of rounds through a
+two-deep host/device pipeline: while round r's jitted step executes on
+the device (jax dispatch is asynchronous), the host finishes round
+r−1 (block → batched downlink encode → yield) and then packs/decodes
+round r+1's uploads.  The contract:
+
+* **buffer ownership** — ``pack_uploads`` stages its big host tensors
+  (unified, slot_masks) in a :class:`SlotStage`; the pipeline
+  alternates TWO stages, so the stage refilled for round r+1 is the
+  one round r−1 used — and round r−1 was explicitly blocked
+  (``jax.block_until_ready`` on its whole ``EngineOutput``) before
+  that refill begins.  A staging buffer is therefore never written
+  while a device step that may alias it (CPU ``jnp.asarray`` can be
+  zero-copy) is in flight.  Fresh (non-staged) allocations — the small
+  per-slot tensors, and everything in the ``pipeline=False`` path —
+  need no discipline: they are never reused.
+* **block_until_ready** — the ONLY sync points are the per-round drain
+  (block on round r−1's outputs before encoding its downlinks) and
+  the implicit ``np.asarray`` of downlink tensors inside
+  ``downlinks``.  Dispatch order on a single device serialises the
+  steps, so draining r−1 after dispatching r leaves the device busy
+  throughout.
+* **escape hatch** — ``pipeline=False`` runs pack → block → downlink
+  strictly sequentially with fresh buffers.  Both paths execute the
+  identical numpy/XLA computations in a different order, so pipelined
+  rounds are **bit-identical** to sequential ones (the A/B contract
+  tests/test_pipeline.py enforces, mirroring the sharded ≡
+  single-device contract above).
+* **timings** — each yielded round carries a ``phase_us`` dict
+  (``pack`` / ``decode`` / ``encode`` / ``device`` microseconds;
+  ``device`` is dispatch→ready wall, which under the pipeline
+  overlaps the host phases of its neighbours).
+
+``round_stream`` pulls upload round r+1 before yielding round r, so
+the input iterable must not depend on the previous round's downlinks —
+replay/bench traffic qualifies; the simulator's closed training loop
+instead pipelines via the strategy's deferred drain
+(``MaTUStrategy(pipeline=True)``), which overlaps the dispatched round
+with the simulator's own bookkeeping under the same blocking contract.
+
 Sharding contract
 -----------------
 With a mesh, one engine call runs distributed over the ``taskvec``
@@ -139,6 +181,7 @@ host devices on the CI debug mesh):
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
@@ -290,11 +333,39 @@ def _mesh_layout(mesh: Optional[Mesh]):
     return axes, sizes, int(np.prod(sizes)) if axes else 1
 
 
+class SlotStage:
+    """Reusable host staging buffers for :func:`pack_uploads`.
+
+    Holds the round's BIG host tensors (unified vectors, slot mask
+    words) keyed by name, reallocating only when the shape signature
+    changes — so a steady-state round stream refills warm pages instead
+    of faulting fresh hundred-MB allocations every round.  Ownership
+    contract (see "Host pipeline" in the module docstring): because CPU
+    ``jnp.asarray`` may be zero-copy, a stage must not be refilled
+    while a device step that consumed its buffers is still in flight —
+    ``RoundEngine.round_stream`` alternates two stages and blocks round
+    r−1 before round r+1 touches its stage.
+    """
+
+    def __init__(self) -> None:
+        self._bufs: Dict[str, np.ndarray] = {}
+
+    def alloc(self, name: str, shape: tuple, dtype) -> np.ndarray:
+        buf = self._bufs.get(name)
+        if (buf is None or buf.shape != tuple(shape)
+                or buf.dtype != np.dtype(dtype)):
+            buf = np.empty(shape, dtype)
+            self._bufs[name] = buf
+        return buf
+
+
 def pack_uploads(uploads: Sequence[ClientUpload], n_tasks: int, *,
                  n_max: Optional[int] = None,
                  k_max: Optional[int] = None,
                  packed: bool = True,
-                 mesh: Optional[Mesh] = None) -> PackedRound:
+                 mesh: Optional[Mesh] = None,
+                 stage: Optional[SlotStage] = None,
+                 phase_us: Optional[Dict[str, float]] = None) -> PackedRound:
     """Pack a ragged round of uploads into the engine's slot layout.
 
     Pure data movement (numpy fills + ``np.packbits`` of O(Σ k_n · d)
@@ -304,6 +375,17 @@ def pack_uploads(uploads: Sequence[ClientUpload], n_tasks: int, *,
     bit-packed and its unified vector rounded to bf16 here — this IS
     the uplink quantisation, applied once at the wire boundary.
 
+    Entropy-coded (uint8 stream) uploads are decoded here at the host
+    edge in ONE batched ``decode_mask_rows`` call across every coded
+    client — records are self-delimiting, so the concatenated streams
+    decode to exactly the per-client rows (the jitted round never sees
+    the coded layer).
+
+    ``stage`` reuses a :class:`SlotStage`'s big staging buffers
+    (pipeline path — see the buffer-ownership contract); ``phase_us``
+    accumulates ``pack`` / ``decode`` host microseconds into the given
+    dict.
+
     With ``mesh``, d is zero-padded to ``pad_d_for_shards`` and every
     d-axis tensor is placed with its taskvec ``NamedSharding`` (packed
     mask words split on whole 8-word blocks — never mid-word); scalars
@@ -312,6 +394,7 @@ def pack_uploads(uploads: Sequence[ClientUpload], n_tasks: int, *,
     if not uploads:
         raise ValueError("pack_uploads: empty round (no uploads) — "
                          "sample at least one client or skip the round")
+    t_pack = time.perf_counter()
     n = len(uploads)
     d = int(uploads[0].unified.shape[0])
     _, _, n_shards = _mesh_layout(mesh)
@@ -321,24 +404,50 @@ def pack_uploads(uploads: Sequence[ClientUpload], n_tasks: int, *,
     if n_max < n:
         raise ValueError(f"n_max={n_max} < round size {n}")
 
+    # one batched host-edge decode for ALL coded clients: streams
+    # concatenate (records self-delimit) and split back by row count
+    ks = [len(u.task_ids) for u in uploads]
+    masks_np = [np.asarray(u.masks) for u in uploads]
+    coded = [i for i, m in enumerate(masks_np) if m.dtype == np.uint8]
+    dec_s = 0.0
+    if coded:
+        from repro.fed.compression import decode_mask_rows
+        t0 = time.perf_counter()
+        rows = decode_mask_rows(
+            masks_np[coded[0]] if len(coded) == 1
+            else np.concatenate([masks_np[i] for i in coded]),
+            d, sum(ks[i] for i in coded))
+        off = 0
+        for i in coded:
+            masks_np[i] = rows[off:off + ks[i]]
+            off += ks[i]
+        dec_s = time.perf_counter() - t0
+
     # np.empty + zero only the padding: the valid region is fully
     # overwritten below, so a full np.zeros would write the big
-    # mask/vector buffers twice for nothing
+    # mask/vector buffers twice for nothing.  With a stage the same
+    # (possibly dirty) buffers come back each round — the explicit
+    # padding writes below are exactly the re-zeroing reuse needs.
     # host-side bf16 fill for the wire layout (ml_dtypes ships with
     # jax): halves the host→device transfer and skips the device cast
     vec_dtype = np.float32
     if packed:
         import ml_dtypes
         vec_dtype = ml_dtypes.bfloat16
-    unified = np.empty((n_max, d_pad), vec_dtype)
+    alloc = stage.alloc if stage is not None else (
+        lambda _name, shape, dtype: np.empty(shape, dtype))
+    unified = alloc("unified", (n_max, d_pad), vec_dtype)
     unified[n:] = 0.0
     unified[:, d:] = 0.0
     if packed:
         dw = bitpack.packed_width(d)
-        slot_masks = np.zeros((n_max, k_max, bitpack.packed_width(d_pad)),
-                              np.uint32)
+        wpad = bitpack.packed_width(d_pad)
+        slot_masks = alloc("slot_masks", (n_max, k_max, wpad), np.uint32)
+        slot_masks[n:] = 0
+        if wpad > dw:
+            slot_masks[:n, :, dw:] = 0
     else:
-        slot_masks = np.empty((n_max, k_max, d_pad), bool)
+        slot_masks = alloc("slot_masks", (n_max, k_max, d_pad), bool)
         slot_masks[n:] = False
         slot_masks[:, :, d:] = False
     slot_lams = np.zeros((n_max, k_max), np.float32)
@@ -347,20 +456,15 @@ def pack_uploads(uploads: Sequence[ClientUpload], n_tasks: int, *,
     slot_valid = np.zeros((n_max, k_max), bool)
 
     for i, up in enumerate(uploads):
-        k = len(up.task_ids)
+        k = ks[i]
         unified[i, :d] = np.asarray(up.unified)
-        m = np.asarray(up.masks)
-        if m.dtype == np.uint8:
-            # entropy-coded wire stream: decode to packed words here at
-            # the host edge (repro.fed.compression) — the jitted round
-            # never sees the coded layer
-            from repro.fed.compression import decode_mask_rows
-            m = decode_mask_rows(m, d, k)
+        m = masks_np[i]
         if packed:
             # accept either bool masks (legacy clients — packed here at
             # the wire boundary) or already-packed words
             slot_masks[i, :k, :dw] = (m if m.dtype == np.uint32
                                       else bitpack.pack_bits_np(m))
+            slot_masks[i, k:, :dw] = 0
         else:
             slot_masks[i, :k, :d] = (bitpack.unpack_bits_np(m, d)
                                      if m.dtype == np.uint32 else m)
@@ -369,6 +473,10 @@ def pack_uploads(uploads: Sequence[ClientUpload], n_tasks: int, *,
         slot_sizes[i, :k] = np.asarray(up.data_sizes, np.float32)
         slot_tasks[i, :k] = up.task_ids
         slot_valid[i, :k] = True
+    if phase_us is not None:
+        phase_us["decode"] = phase_us.get("decode", 0.0) + dec_s * 1e6
+        phase_us["pack"] = (phase_us.get("pack", 0.0)
+                            + (time.perf_counter() - t_pack - dec_s) * 1e6)
 
     arrays = (unified, slot_masks, slot_lams, slot_sizes, slot_tasks,
               slot_valid)
@@ -531,30 +639,49 @@ class RoundEngine:
                             rho=self.cfg.rho, m_hats_dense=m_hats)
 
     def downlinks(self, packed: PackedRound, out: EngineOutput, *,
-                  code_masks: bool = False) -> Dict[int, ClientDownlink]:
+                  code_masks: bool = False,
+                  phase_us: Optional[Dict[str, float]] = None
+                  ) -> Dict[int, ClientDownlink]:
         """Slice the batched downlink tensors back to ragged per-client
         ClientDownlinks (views, no compute).  Mask rows stay in the
         packed wire format; clients unpack on use (``modulate``).
 
-        With ``code_masks`` each client's mask rows are entropy-coded
-        at this host edge into one self-describing uint8 stream (the
-        Golomb-Rice wire layer, ``repro.fed.compression``); clients
-        decode on use (``ClientDownlink.mask_row``) and downlink bits
-        are measured off the actual stream."""
+        With ``code_masks`` every client's mask rows are entropy-coded
+        at this host edge in ONE batched ``encode_mask_rows_with_sizes``
+        call (the Golomb-Rice wire layer, ``repro.fed.compression``) and
+        the concatenated stream is split back into per-client streams by
+        the per-row record sizes — records self-delimit, so each slice
+        is byte-identical to encoding that client alone.  Clients decode
+        on use (``ClientDownlink.mask_row``) and downlink bits are
+        measured off the actual stream.  ``phase_us`` accumulates the
+        ``encode`` host microseconds."""
+        streams: Optional[List[jax.Array]] = None
         if code_masks:
-            from repro.fed.compression import encode_mask_rows
+            from repro.fed.compression import encode_mask_rows_with_sizes
+            t0 = time.perf_counter()
             down_masks = np.asarray(out.down_masks)
             if down_masks.dtype != np.uint32:     # bool A/B layout
                 down_masks = bitpack.pack_bits_np(down_masks)
+            ks = [len(t) for t in packed.task_ids]
+            rows = down_masks[np.repeat(np.arange(len(ks)), ks),
+                              np.concatenate([np.arange(k, dtype=np.int64)
+                                              for k in ks])]
+            stream, sizes = encode_mask_rows_with_sizes(rows, packed.d)
+            ends = np.cumsum(sizes)
+            streams, b0, r0 = [], 0, 0
+            for k in ks:
+                b1 = int(ends[r0 + k - 1]) if k else b0
+                streams.append(jnp.asarray(stream[b0:b1]))
+                b0, r0 = b1, r0 + k
+            if phase_us is not None:
+                phase_us["encode"] = (phase_us.get("encode", 0.0)
+                                      + (time.perf_counter() - t0) * 1e6)
         result: Dict[int, ClientDownlink] = {}
         for i, cid in enumerate(packed.client_ids):
             k = len(packed.task_ids[i])
-            if code_masks:
-                rows = jnp.asarray(encode_mask_rows(down_masks[i, :k],
-                                                    packed.d))
-            else:
-                rows = out.down_masks[i, :k]
-            result[cid] = ClientDownlink(out.down_unified[i], rows,
+            rows_i = (streams[i] if code_masks
+                      else out.down_masks[i, :k])
+            result[cid] = ClientDownlink(out.down_unified[i], rows_i,
                                          out.down_lams[i, :k])
         return result
 
@@ -571,6 +698,64 @@ class RoundEngine:
                              mesh=self.mesh)
         out = self.run_packed(batch, mode=mode)
         return self.downlinks(batch, out, code_masks=code_masks), out
+
+    def round_stream(self, rounds, *, mode: Optional[str] = None,
+                     packed: bool = True, code_masks: bool = False,
+                     pipeline: bool = True):
+        """Run an iterable of upload rounds through the two-deep host
+        pipeline (see "Host pipeline" in the module docstring): while
+        the device executes round r, the host drains round r−1 (block
+        → batched downlink encode → yield) and packs/decodes round
+        r+1's uploads into the alternate :class:`SlotStage`.
+
+        Yields ``(downlinks, out, phase_us)`` per round, in input
+        order; ``phase_us`` maps ``pack`` / ``decode`` / ``encode`` /
+        ``device`` to host microseconds (``device`` is dispatch→ready
+        wall — under the pipeline it overlaps its neighbours' host
+        phases).  ``pipeline=False`` is the strictly-sequential escape
+        hatch, bit-identical by construction.  Rounds are pulled one
+        ahead of yields, so the iterable must not depend on the
+        previous round's downlinks (replay/bench traffic)."""
+        if not pipeline:
+            for ups in rounds:
+                phase: Dict[str, float] = {}
+                batch = pack_uploads(ups, self.cfg.n_tasks, packed=packed,
+                                     mesh=self.mesh, phase_us=phase)
+                t0 = time.perf_counter()
+                out = self.run_packed(batch, mode=mode)
+                jax.block_until_ready(out)
+                phase["device"] = (time.perf_counter() - t0) * 1e6
+                yield (self.downlinks(batch, out, code_masks=code_masks,
+                                      phase_us=phase), out, phase)
+            return
+
+        stages = (SlotStage(), SlotStage())
+        prev = None
+        for r, ups in enumerate(rounds):
+            phase: Dict[str, float] = {}
+            # host pack/decode of round r overlaps round r−1's device
+            # step; stage r%2 was last consumed by round r−2, which was
+            # drained (blocked) before this point — never in flight
+            batch = pack_uploads(ups, self.cfg.n_tasks, packed=packed,
+                                 mesh=self.mesh, stage=stages[r % 2],
+                                 phase_us=phase)
+            out = self.run_packed(batch, mode=mode)      # async dispatch
+            pend = (batch, out, phase, time.perf_counter())
+            if prev is not None:
+                yield self._drain_round(prev, code_masks)
+            prev = pend
+        if prev is not None:
+            yield self._drain_round(prev, code_masks)
+
+    def _drain_round(self, pend, code_masks: bool):
+        """Block on a dispatched round and materialise its downlinks —
+        the host-side half the pipeline overlaps with the NEXT round's
+        device step."""
+        batch, out, phase, t_disp = pend
+        jax.block_until_ready(out)
+        phase["device"] = (time.perf_counter() - t_disp) * 1e6
+        return (self.downlinks(batch, out, code_masks=code_masks,
+                               phase_us=phase), out, phase)
 
 
 def _slice_outputs(out: tuple, d: int, packed: bool) -> tuple:

@@ -71,9 +71,28 @@ class MaTUServer:
                      code_masks: bool = False) -> Dict[int, ClientDownlink]:
         """Server step over an already-packed batch (the strategy's
         pre-packed upload path — skips ``pack_uploads`` entirely)."""
+        out = self.start_round(packed)
+        return self.finish_round(packed, out, code_masks=code_masks)
+
+    def start_round(self, packed: PackedRound) -> EngineOutput:
+        """Dispatch the jitted round WITHOUT materialising downlinks —
+        the overlap half of ``round_packed``.  jax dispatch is async,
+        so this returns immediately with in-flight arrays; pair with
+        :meth:`finish_round` (the pipelined strategy defers that drain
+        so the device step overlaps host bookkeeping)."""
         out = self.engine.run_packed(packed)
         self._record(out)
-        return self.engine.downlinks(packed, out, code_masks=code_masks)
+        return out
+
+    def finish_round(self, packed: PackedRound, out: EngineOutput, *,
+                     code_masks: bool = False,
+                     phase_us: Optional[Dict[str, float]] = None
+                     ) -> Dict[int, ClientDownlink]:
+        """Materialise per-client downlinks from a dispatched round
+        (blocks on the downlink tensors; batched Golomb-Rice encode
+        when ``code_masks``)."""
+        return self.engine.downlinks(packed, out, code_masks=code_masks,
+                                     phase_us=phase_us)
 
     def _record(self, out: EngineOutput) -> None:
         self.last_similarity = out.similarity

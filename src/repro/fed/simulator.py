@@ -33,6 +33,11 @@ class FedConfig:
     prox_mu: float = 0.1
     eval_every: int = 5
     seed: int = 0
+    # defer the strategy's server-round drain so the dispatched round
+    # overlaps the simulator's host bookkeeping (MaTU; no-op for
+    # per-client strategies).  Bit-identical to False — same ops,
+    # different order (tests/test_pipeline.py).
+    pipeline: bool = False
 
 
 @dataclass
@@ -47,6 +52,13 @@ class History:
     # them; 0 otherwise.  Uplink bits follow the same rule — with the
     # coded wire both columns are real coded stream lengths.
     downlink_bits_per_round: List[int] = field(default_factory=list)
+    # per-phase host/device µs of each round's server step, as reported
+    # by the strategy ({"pack"/"decode"/"encode"/"device"} where the
+    # strategy measures them, {} otherwise).  Under pipeline=True a
+    # round's phases complete at its drain, so entry r holds the most
+    # recently COMPLETED round at the time round r was recorded — one
+    # behind the in-flight round.
+    phase_us: List[Dict[str, float]] = field(default_factory=list)
 
     @property
     def final_task_acc(self) -> Dict[int, float]:
@@ -68,6 +80,16 @@ class History:
         b = self.downlink_bits_per_round
         return float(np.mean(b)) if b else 0.0
 
+    @property
+    def mean_phase_us(self) -> Dict[str, float]:
+        """Per-phase mean µs over the rounds that reported that phase
+        ({} when the strategy measures nothing)."""
+        out: Dict[str, List[float]] = {}
+        for ph in self.phase_us:
+            for key, us in (ph or {}).items():
+                out.setdefault(key, []).append(us)
+        return {k: float(np.mean(v)) for k, v in out.items()}
+
 
 class FedSimulator:
     def __init__(self, cfg: FedConfig, constellation: Constellation,
@@ -85,6 +107,7 @@ class FedSimulator:
         self.mesh = mesh
         if mesh is not None:
             strategy.use_mesh(mesh)
+        strategy.use_pipeline(cfg.pipeline)
         self.rng = jax.random.PRNGKey(cfg.seed)
         self.n_clients = len(split.tasks)
 
@@ -158,6 +181,10 @@ class FedSimulator:
             # per-client strategies unwrap the ragged uploads list
             self.strategy.aggregate_batch(RoundBatch.from_uploads(
                 uploads, self.con.n_tasks))
+            # under pipeline=True the dispatched round is still in
+            # flight here: this snapshot is the most recently completed
+            # round's phases (see History.phase_us)
+            hist.phase_us.append(dict(self.strategy.last_phase_us or {}))
             for t, pairs in new_heads.items():
                 w = jnp.asarray([p[1] for p in pairs], jnp.float32)
                 w = w / jnp.sum(w)

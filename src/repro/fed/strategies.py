@@ -15,6 +15,7 @@ columns of Tables 1–2.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -112,6 +113,10 @@ class Strategy:
     name = "base"
     needs_prox = False
     needs_linearize = False
+    # per-phase host/device µs of the most recently COMPLETED server
+    # round ({"pack"/"decode"/"encode"/"device"} where applicable);
+    # None for strategies that don't measure
+    last_phase_us: Optional[Dict[str, float]] = None
 
     def __init__(self, n_tasks: int, d: int):
         self.n_tasks, self.d = n_tasks, d
@@ -131,6 +136,12 @@ class Strategy:
         """Install a device mesh for strategies whose server step can
         run sharded (MaTU's taskvec-sharded round engine); the default
         is a no-op so per-client strategies ignore it."""
+
+    def use_pipeline(self, on: bool) -> None:
+        """Enable the deferred-drain server pipeline for strategies
+        that support it (MaTU overlaps the dispatched round with host
+        bookkeeping); the default is a no-op so per-client strategies
+        ignore it."""
 
     def eval_vectors(self, task_id: int) -> List[jax.Array]:
         raise NotImplementedError
@@ -152,7 +163,8 @@ class MaTUStrategy(Strategy):
     def __init__(self, n_tasks: int, d: int, *, rho: float = 0.4,
                  eps: float = 0.5, kappa: int = 3, cross_task: bool = True,
                  uniform_cross: bool = False, compress: bool = False,
-                 code_masks: bool = False, mesh=None):
+                 code_masks: bool = False, pipeline: bool = False,
+                 mesh=None):
         super().__init__(n_tasks, d)
         self.mesh = mesh
         self.server = MaTUServer(MaTUServerConfig(
@@ -169,15 +181,44 @@ class MaTUStrategy(Strategy):
         # coder's measured size without shipping the streams.
         self.code_masks = code_masks
         self.compress = compress
+        # ``pipeline``: defer the round's drain (block + downlink
+        # encode) until its results are first NEEDED (next task_init /
+        # downlink_bits), so the async-dispatched jitted round overlaps
+        # the simulator's host bookkeeping between rounds.  Same ops in
+        # a different order — bit-identical to pipeline=False (the
+        # tests/test_pipeline.py contract).
+        self.pipeline = pipeline
+        self._pending = None     # (packed, out, phase_us, t_dispatch)
         self._last_uploads: List[ClientUpload] = []
 
     def use_mesh(self, mesh) -> None:
         """Shard the server round over the taskvec axis of ``mesh``
         (None restores the single-device path)."""
+        self._drain()
         self.mesh = mesh
         self.server.use_mesh(mesh)
 
+    def use_pipeline(self, on: bool) -> None:
+        """Toggle the deferred-drain pipeline (drains any in-flight
+        round first so toggling mid-run is safe)."""
+        self._drain()
+        self.pipeline = on
+
+    def _drain(self) -> None:
+        """Finish the in-flight round, if any: block on the device
+        step, batch-encode + install its downlinks, record timings."""
+        if self._pending is None:
+            return
+        packed, out, phase, t_disp = self._pending
+        self._pending = None
+        jax.block_until_ready(out)
+        phase["device"] = (time.perf_counter() - t_disp) * 1e6
+        self.downlinks.update(self.server.finish_round(
+            packed, out, code_masks=self.code_masks, phase_us=phase))
+        self.last_phase_us = phase
+
     def task_init(self, client_id: int, task_id: int) -> jax.Array:
+        self._drain()
         dl = self.downlinks.get(client_id)
         if dl is None:
             return jnp.zeros((self.d,), jnp.float32)
@@ -197,28 +238,47 @@ class MaTUStrategy(Strategy):
         accounting is measured off these buffers, not simulated.  With
         a mesh installed both steps run sharded over the taskvec axis
         (the wire tensors are born with the d-axis NamedSharding and
-        never reshard between unify and round)."""
+        never reshard between unify and round).  With ``pipeline`` the
+        round is left dispatched-but-undrained on return (downlinks
+        materialise at first use); either way at most one round is ever
+        in flight."""
+        self._drain()
+        phase: Dict[str, float] = {}
+        t0 = time.perf_counter()
         unified, mask_words, lams = batched_client_unify(
             batch.task_vectors, batch.valid, mesh=self.mesh)
         packed = pack_from_slots(batch.client_ids, batch.task_ids, unified,
                                  mask_words, lams, batch.slot_tasks,
                                  batch.valid, batch.slot_sizes, self.n_tasks,
                                  d=self.d, mesh=self.mesh)
-        self.downlinks.update(self.server.round_packed(
-            packed, code_masks=self.code_masks))
+        out = self.server.start_round(packed)     # async dispatch
+        t_disp = time.perf_counter()
+        phase["pack"] = (t_disp - t0) * 1e6
         dw = bitpack.packed_width(self.d)
+        ks = [len(u.task_ids) for u in batch.uploads]
         if self.code_masks:
-            # the coded uplink: each client's packed word rows — the
-            # exact bytes the engine computes on — entropy-coded into
-            # one self-describing stream (decode needs only d)
-            from repro.fed.compression import encode_mask_rows
+            # the coded uplink: every client's packed word rows — the
+            # exact bytes the engine computes on — entropy-coded in ONE
+            # batched call (np.asarray blocks only on the unify kernel,
+            # not the in-flight round) and split back per client by the
+            # self-delimiting record sizes
+            from repro.fed.compression import encode_mask_rows_with_sizes
+            t1 = time.perf_counter()
             words_np = np.asarray(mask_words)
-            up_masks = [jnp.asarray(encode_mask_rows(
-                words_np[i, :len(u.task_ids), :dw], self.d))
-                for i, u in enumerate(batch.uploads)]
+            rows = words_np[np.repeat(np.arange(len(ks)), ks),
+                            np.concatenate([np.arange(k, dtype=np.int64)
+                                            for k in ks])][:, :dw]
+            stream, sizes = encode_mask_rows_with_sizes(rows, self.d)
+            ends = np.cumsum(sizes)
+            up_masks, b0, r0 = [], 0, 0
+            for k in ks:
+                b1 = int(ends[r0 + k - 1]) if k else b0
+                up_masks.append(jnp.asarray(stream[b0:b1]))
+                b0, r0 = b1, r0 + k
+            phase["encode"] = (time.perf_counter() - t1) * 1e6
         else:
-            up_masks = [mask_words[i, :len(u.task_ids), :dw]
-                        for i, u in enumerate(batch.uploads)]
+            up_masks = [mask_words[i, :k, :dw]
+                        for i, k in enumerate(ks)]
         self._last_uploads = [
             ClientUpload(u.client_id, list(u.task_ids),
                          unified[i, :self.d], up_masks[i],
@@ -227,6 +287,9 @@ class MaTUStrategy(Strategy):
         ]
         for u in batch.uploads:
             self.client_tasks[u.client_id] = list(u.task_ids)
+        self._pending = (packed, out, phase, t_disp)
+        if not self.pipeline:
+            self._drain()
 
     def eval_vectors(self, task_id: int) -> List[jax.Array]:
         return [self.server.last_task_vectors[task_id]]
@@ -253,6 +316,7 @@ class MaTUStrategy(Strategy):
         ``downlinks`` dict is the persistent per-client state cache
         (``task_init`` needs every client ever served), so sum just the
         clients actually served this round."""
+        self._drain()
         return sum(self.downlinks[u.client_id].downlink_bits()
                    for u in self._last_uploads
                    if u.client_id in self.downlinks)

@@ -130,6 +130,23 @@ def pack_tile(bits: jax.Array) -> jax.Array:
     return jnp.sum(b << iota, axis=-1, dtype=jnp.uint32)
 
 
+def scatter_bits_np(positions: np.ndarray, n_bytes: int) -> np.ndarray:
+    """Set the given bit positions (LSB-first within each byte — the
+    module's one bit convention) in a zeroed ``n_bytes``-byte buffer.
+
+    The substrate of the batched Golomb-Rice encoder's prefix-sum
+    bit-scatter (:mod:`repro.fed.compression`): every row's unary
+    terminators and remainder bits land in one preallocated bit-space
+    with a single fancy-index write + one ``np.packbits`` — no
+    per-row/per-symbol Python loop, and no read-modify-write hazard
+    (duplicate byte indices are fine because the OR happens in
+    bit-space, where positions are unique)."""
+    bit_space = np.zeros(8 * n_bytes, np.uint8)
+    if positions.size:
+        bit_space[positions] = 1
+    return np.packbits(bit_space, bitorder="little")
+
+
 def sign_planes(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Pack ``sgn(x)`` over the last axis into (pos, nz) bit-planes:
     ``pos`` has bit j set iff x_j > 0, ``nz`` iff x_j != 0."""

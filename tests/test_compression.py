@@ -16,8 +16,13 @@ import pytest
 from repro.core.client import ClientUpload
 from repro.core.engine import EngineConfig, RoundEngine, pack_uploads
 from repro.core.unify import unify_with_modulators
+import repro.fed.compression as compression
 from repro.fed.compression import (HEADER_BYTES, coded_mask_bits,
-                                   decode_mask_rows, encode_mask_rows,
+                                   decode_mask_rows,
+                                   decode_mask_rows_reference,
+                                   encode_mask_rows,
+                                   encode_mask_rows_reference,
+                                   encode_mask_rows_with_sizes,
                                    golomb_encode_bits, mask_entropy_bits,
                                    rice_decode_words, rice_encode_words)
 from repro.kernels import bitpack
@@ -111,6 +116,96 @@ def test_multirow_stream_roundtrip():
     assert coded_mask_bits(rows, d) == 8 * stream.size
 
 
+# -- batched coder ≡ scalar reference ----------------------------------------
+
+def _adversarial_stack(rng, d):
+    """A row stack hitting every coder regime at once: all-zero /
+    all-one / single-bit / balanced escape / the biased benchmark
+    densities / near-degenerate p — mixed densities also force the
+    per-row (non-uniform) Rice-k path of the batched encoder."""
+    rows = [np.zeros(d, bool), np.ones(d, bool)]
+    one = np.zeros(d, bool)
+    one[int(rng.integers(d))] = True
+    rows.append(one)
+    for p in (0.5, 0.75, 0.25, 0.03, 0.97, 0.0001, 0.9999):
+        rows.append(_mask(rng, d, p))
+    return bitpack.pack_bits_np(np.stack(rows))
+
+
+@pytest.mark.parametrize("d", [1, 31, 33, 100, 4097, 70001])
+def test_batched_byte_identical_to_scalar(d):
+    """The tentpole contract: the batched encoder emits the EXACT bytes
+    of the row-by-row scalar coder (so every PR 4 round-trip guarantee
+    carries over), and the batched decoder inverts both."""
+    rng = np.random.default_rng(d)
+    words = _adversarial_stack(rng, d)
+    stream = encode_mask_rows(words, d)
+    ref = encode_mask_rows_reference(words, d)
+    assert stream.tobytes() == ref.tobytes()
+    k = words.shape[0]
+    np.testing.assert_array_equal(decode_mask_rows(stream, d, k), words)
+    np.testing.assert_array_equal(
+        decode_mask_rows_reference(stream, d, k), words)
+    # per-row sizes partition the stream exactly (the batched split
+    # the engine's downlink / strategy's uplink paths rely on)
+    s2, sizes = encode_mask_rows_with_sizes(words, d)
+    assert s2.tobytes() == ref.tobytes()
+    assert sizes.sum() == stream.size
+    off = 0
+    for i, z in enumerate(sizes):
+        np.testing.assert_array_equal(
+            decode_mask_rows(stream[off:off + int(z)], d, 1)[0], words[i])
+        off += int(z)
+
+
+def test_batched_chunking_is_invisible(monkeypatch):
+    """Tiny chunk bounds force the encoder's multi-chunk loop and the
+    decoder's windowed walk at test scale — records self-delimit and
+    concatenate, so the bytes cannot change."""
+    rng = np.random.default_rng(11)
+    d = 257
+    words = bitpack.pack_bits_np(
+        np.stack([_mask(rng, d, rng.random()) for _ in range(50)]))
+    ref = encode_mask_rows_reference(words, d)
+    monkeypatch.setattr(compression, "_ENC_CHUNK_BITS", 512)
+    monkeypatch.setattr(compression, "_DEC_WINDOW_BYTES", 64)
+    monkeypatch.setattr(compression, "_DEC_DENSE_BITS", 1024)
+    stream = encode_mask_rows(words, d)
+    assert stream.tobytes() == ref.tobytes()
+    np.testing.assert_array_equal(decode_mask_rows(stream, d, 50), words)
+
+
+def test_batched_ragged_d_tail_words():
+    """d just under / at / over word boundaries (ragged tails) through
+    the batched path — tail bits of the last word stay zero on decode."""
+    rng = np.random.default_rng(12)
+    for d in (31, 32, 33, 63, 64, 65, 95):
+        words = bitpack.pack_bits_np(
+            np.stack([_mask(rng, d, p) for p in (0.1, 0.5, 0.9)]))
+        stream = encode_mask_rows(words, d)
+        assert stream.tobytes() == encode_mask_rows_reference(
+            words, d).tobytes()
+        np.testing.assert_array_equal(decode_mask_rows(stream, d, 3), words)
+
+
+def test_batched_decode_rejects_corrupt_streams():
+    """The batched decoder raises (never returns garbage) on the same
+    corrupt inputs the scalar decoder rejects."""
+    rng = np.random.default_rng(13)
+    d = 1000
+    words = bitpack.pack_bits_np(np.stack([_mask(rng, d, 0.75)
+                                           for _ in range(3)]))
+    stream = encode_mask_rows(words, d)
+    with pytest.raises(ValueError):
+        decode_mask_rows(stream[:-1], d, 3)          # truncated
+    with pytest.raises(ValueError):
+        decode_mask_rows(stream, d, 2)               # trailing bytes
+    bad = stream.copy()
+    bad[1:5] = np.array([255, 255, 255, 127], np.uint8)  # absurd run count
+    with pytest.raises(ValueError):
+        decode_mask_rows(bad, d, 3)
+
+
 try:
     import hypothesis
     import hypothesis.strategies as st
@@ -129,6 +224,20 @@ if HAVE_HYPOTHESIS:
         decoded, consumed = rice_decode_words(stream, d)
         assert consumed == stream.size
         np.testing.assert_array_equal(decoded, words)
+
+    @hypothesis.given(st.integers(1, 2000), st.integers(1, 8),
+                      st.integers(0, 2**31 - 1))
+    @hypothesis.settings(max_examples=40, deadline=None)
+    def test_batched_parity_property(d, k, seed):
+        """Batched coder ≡ scalar reference on random (k, d) stacks of
+        per-row random density."""
+        rng = np.random.default_rng(seed)
+        words = bitpack.pack_bits_np(
+            np.stack([rng.random(d) < rng.random() for _ in range(k)]))
+        stream = encode_mask_rows(words, d)
+        assert stream.tobytes() == encode_mask_rows_reference(
+            words, d).tobytes()
+        np.testing.assert_array_equal(decode_mask_rows(stream, d, k), words)
 
 
 # -- the coded layer through the stack ---------------------------------------

@@ -46,6 +46,15 @@ measured on the sequential leg (where the phases don't overlap, so
 they sum to the wall).  ``host_cores`` is recorded alongside: on a
 single-core host the pipeline has no second core to overlap onto and
 pipe ≈ seq — the column pair is the evidence either way.
+
+With ``--faults`` a simulator-level A/B runs on top: the buffered
+async mode (``FedSimulator(..., systems=...)`` + AsyncMaTUStrategy)
+under the issue's fault trace — 30% dropout + 2x-latency stragglers,
+staleness cap 4 — vs the synchronous barrier loop on the same
+workload.  The ``engine_async`` row reports per-round wall µs with
+rounds/sec for both legs; the detail JSON records the fault totals so
+the throughput number is auditable against how much work each leg
+actually admitted.
 """
 
 from __future__ import annotations
@@ -168,8 +177,59 @@ def _coded_uploads(wire):
     return out
 
 
+def _bench_async_faults(quick: bool):
+    """Simulator-level async A/B: per-round wall time of the buffered
+    async mode under the fault trace (30% dropout + 2x-latency
+    stragglers, staleness cap 4) vs the synchronous barrier loop on
+    the same federated workload.  Local training dominates both legs
+    equally; the delta is the event-clock + admission-queue + carried-
+    state overhead the async server adds per round."""
+    from repro.data.dirichlet import dirichlet_split
+    from repro.data.synthetic import make_constellation
+    from repro.fed.simulator import FedConfig, FedSimulator
+    from repro.fed.strategies import AsyncMaTUStrategy, MaTUStrategy
+    from repro.fed.systems import ClientSystems, FaultModel
+    from repro.fed.testbed import MLPBackbone
+
+    n_tasks, n_clients = 5, 8
+    con = make_constellation(n_tasks=n_tasks, n_groups=2, feat_dim=16,
+                             n_classes=4, seed=0)
+    split = dirichlet_split(n_clients=n_clients, n_tasks=n_tasks,
+                            n_classes=4, zeta_t=0.5, tasks_per_client=2,
+                            seed=0)
+    bb = MLPBackbone(16, hidden=24, lora_rank=4)
+    rounds = 4 if quick else 10
+    cfg = FedConfig(rounds=rounds, participation=1.0, local_steps=2,
+                    batch_size=16, local_data=64, eval_every=rounds,
+                    max_staleness=4)
+    faults = FaultModel(dropout=0.3, straggler_frac=0.5, straggler_delay=1,
+                        seed=3)
+
+    def timed(strategy, systems):
+        sim = FedSimulator(cfg, con, split, bb, strategy, systems=systems)
+        t0 = time.perf_counter()
+        hist = sim.run()
+        return time.perf_counter() - t0, hist
+
+    timed(MaTUStrategy(n_tasks, bb.d), None)            # warm jit caches
+    timed(AsyncMaTUStrategy(n_tasks, bb.d), ClientSystems(n_clients, faults))
+    s_sync, _ = timed(MaTUStrategy(n_tasks, bb.d), None)
+    s_async, h_async = timed(AsyncMaTUStrategy(n_tasks, bb.d),
+                             ClientSystems(n_clients, faults))
+    return {
+        "us_per_round_sync": s_sync * 1e6 / rounds,
+        "us_per_round_async": s_async * 1e6 / rounds,
+        "rounds_per_sec_sync": rounds / s_sync,
+        "rounds_per_sec_async": rounds / s_async,
+        "async_vs_sync": s_sync / s_async,
+        "rounds": rounds,
+        "n_clients": n_clients,
+        "fault_totals": h_async.total_fault_counts,
+    }
+
+
 def run(quick: bool = False, devices: int = 1, code_masks: bool = False,
-        pipeline: bool = False):
+        pipeline: bool = False, faults: bool = False):
     grids = ([(8, 8, 1 << 14, 1, 2), (16, 16, 1 << 16, 2, 3)] if quick else
              [(16, 16, 1 << 16, 2, 3), (16, 30, 1 << 18, 2, 3),
               (32, 30, 1 << 20, 3, 4)])
@@ -319,6 +379,18 @@ def run(quick: bool = False, devices: int = 1, code_masks: bool = False,
                 speedup_pipelined_vs_seq=us_stream_seq / us_pipe,
                 pipeline_rounds=n_rounds,
                 host_cores=os.cpu_count())
+
+    if faults:
+        # async fault-trace A/B (simulator-level; one leg, not per-grid)
+        fa = _bench_async_faults(quick)
+        rows.append(("round_engine/fed_async/engine_async",
+                     fa["us_per_round_async"],
+                     f"{fa['rounds_per_sec_async']:.2f}r/s vs sync "
+                     f"{fa['rounds_per_sec_sync']:.2f}r/s "
+                     f"({fa['async_vs_sync']:.2f}x) "
+                     f"admitted={fa['fault_totals']['admitted']} "
+                     f"dropped={fa['fault_totals']['dropped']}"))
+        detail["fed_async"] = fa
 
     save_detail("round_engine", detail)
     return {"rows": rows, "detail": detail}

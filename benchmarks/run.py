@@ -18,6 +18,11 @@ emitted as a row and recorded in results/bench/round_engine.json.
 leg (plus the ``us_host_codec``/``us_device_step`` split) to benches
 that take a ``pipeline`` kwarg (round_engine) — the one-command
 reproduction of the pipelined rows in round_engine.json.
+
+``--faults`` adds the async fault-trace A/B leg to benches that take a
+``faults`` kwarg (round_engine): rounds/sec of the buffered async
+simulator mode under 30% dropout + 2x-latency stragglers vs the
+synchronous barrier loop, emitted as the ``engine_async`` row.
 """
 
 from __future__ import annotations
@@ -56,6 +61,11 @@ def main() -> None:
     ap.add_argument("--pipeline", action="store_true",
                     help="add the pipelined round_stream A/B leg to "
                          "benches that take a ``pipeline`` kwarg")
+    ap.add_argument("--faults", action="store_true",
+                    help="add the async fault-trace A/B leg (rounds/sec "
+                         "async vs sync under 30%% dropout + 2x-latency "
+                         "stragglers) to benches that take a ``faults`` "
+                         "kwarg")
     args = ap.parse_args()
 
     if args.devices > 1:
@@ -81,6 +91,8 @@ def main() -> None:
                 kw["code_masks"] = args.code_masks
             if "pipeline" in params:
                 kw["pipeline"] = args.pipeline
+            if "faults" in params:
+                kw["faults"] = args.faults
             out = mod.run(quick=args.quick, **kw)
             for row in out["rows"]:
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")

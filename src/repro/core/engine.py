@@ -176,6 +176,43 @@ host devices on the CI debug mesh):
   for both the packed and bool layouts (power-of-two shard counts).
   On the Pallas paths masks/m̂/similarity stay bit-identical and λ
   agrees to fp32 accumulation tolerance (the PR 2 tile caveat).
+
+Async & fault model
+-------------------
+The engine itself is stateless per round and keyed by ``(n_max, k_max,
+d, mode)`` — exactly what a buffered async server needs: the admission
+queue (``repro.fed.systems.AdmissionQueue``) drains whatever has
+arrived by the current tick into the SAME fixed-shape slot tensors, so
+the jit caches reuse across ticks regardless of which clients made it.
+
+* **staleness discount** — a buffered upload dispatched at round q and
+  folded at round r carries staleness ``s = r − q``; its slots get the
+  weight ``w = δ**s`` (``δ = STALENESS_DISCOUNT``), attached as
+  ``PackedRound.slot_weights`` and applied inside the jitted round as
+  ``λ·w`` and ``size·w`` before the Eq. 3 masked-agg / λ block
+  partials (``ops._apply_slot_weights``).  Discounting the λ shrinks
+  the stale slot's reconstructed vector; discounting the size shrinks
+  its share of the γ normalization — fresh uploads win both ways.
+* **sync ≡ async equivalence** — with an always-available, zero-
+  latency, zero-fault trace (``ClientSystems.ideal``) every upload has
+  ``s = 0`` so ``w = 1``; the weighted trace multiplies by 1.0 (exact
+  under IEEE 754) and the drain order equals the sync selection order,
+  so the async round is **bit-identical** to the sync one — unified
+  vectors, λ, masks, and the measured History bits
+  (tests/test_async_fed.py).  ``slot_weights=None`` (every synchronous
+  caller) never traces the multiply at all.
+* **fault injection & quarantine** — corrupted coded uploads are the
+  wire's problem, not the engine's: the async strategy validates each
+  client's stream (CRC frame + entropy decode,
+  ``repro.fed.systems.wrap_stream`` / ``CodedStreamError``) BEFORE
+  packing and simply leaves quarantined clients out of the batch; the
+  engine never sees malformed bytes.  Empty rounds (everyone dropped)
+  never reach ``pack_uploads`` — the simulator skips-and-carries.
+* **dark tasks** — a task with no admitted member this round produces
+  τ̂ = 0 and a zeroed similarity row (the padding contract above);
+  the async strategy carries last-seen per-task vectors and decays
+  them toward the unified vector instead of evaluating the zeros (see
+  ``AsyncMaTUStrategy``).
 """
 
 from __future__ import annotations
@@ -196,6 +233,11 @@ from repro.core.client import ClientDownlink, ClientUpload
 from repro.kernels import bitpack, ops
 from repro.kernels.ref import LAMBDA_BLOCK, _next_pow2
 from repro.nn.sharding import taskvec_axes, taskvec_sharding
+
+# default async staleness discount δ: a buffered upload folded s rounds
+# after dispatch enters Eq. 3 with weight δ**s (see "Async & fault
+# model" in the module docstring); δ**0 = 1 keeps fresh uploads exact.
+STALENESS_DISCOUNT = 0.5
 
 
 @dataclass(frozen=True)
@@ -231,6 +273,11 @@ class PackedRound:
     # when packed without a mesh.  The d-axis tensors above carry THIS
     # width; wire accounting and output slicing use the true ``d``.
     d_pad: Optional[int] = None
+    # per-slot staleness-discount weights (n_max, k_max) fp32, or None
+    # for the synchronous (all-fresh) round.  Applied inside the jitted
+    # round as λ·w and size·w before the Eq. 3 / λ block partials (see
+    # ``ops._apply_slot_weights``); w ≡ 1 is bitwise identical to None.
+    slot_weights: Optional[jax.Array] = None
 
     @property
     def n_clients(self) -> int:
@@ -499,7 +546,8 @@ def pack_from_slots(client_ids: List[int], task_ids: List[List[int]],
                     slot_lams: jax.Array, slot_tasks: jax.Array,
                     slot_valid: jax.Array, slot_sizes: jax.Array,
                     n_tasks: int, *, d: Optional[int] = None,
-                    mesh: Optional[Mesh] = None) -> PackedRound:
+                    mesh: Optional[Mesh] = None,
+                    slot_weights: Optional[jax.Array] = None) -> PackedRound:
     """Build a PackedRound from already-batched slot tensors (the
     strategy's pre-packed upload path) — zero copies, the slot layout
     IS the engine's native layout.  ``slot_masks`` may be uint32 wire
@@ -508,7 +556,10 @@ def pack_from_slots(client_ids: List[int], task_ids: List[List[int]],
     ``d`` is the true feature count when the d-axis tensors already
     carry the taskvec-shard padding (``batched_client_unify`` with a
     mesh emits them padded + sharded); with ``mesh`` given and
-    *unpadded* tensors, the pad + sharded placement happens here."""
+    *unpadded* tensors, the pad + sharded placement happens here.
+
+    ``slot_weights`` (optional (n, k_max) fp32) attaches the async
+    staleness discount to the round (replicated under a mesh)."""
     packed = slot_masks.dtype == jnp.uint32
     width = int(unified.shape[-1])
     d = d or width
@@ -530,29 +581,37 @@ def pack_from_slots(client_ids: List[int], task_ids: List[List[int]],
         put_rep = lambda x: jax.device_put(x, rep)  # noqa: E731
     else:
         put_rep = lambda x: x  # noqa: E731
+    if slot_weights is not None:
+        slot_weights = put_rep(jnp.asarray(slot_weights, jnp.float32))
     return PackedRound(client_ids, task_ids, unified, slot_masks,
                        put_rep(slot_lams.astype(jnp.float32)),
                        put_rep(slot_sizes.astype(jnp.float32)),
                        put_rep(slot_tasks.astype(jnp.int32)),
                        put_rep(slot_valid),
-                       n_tasks, d, d_pad if n_shards > 1 else None)
+                       n_tasks, d, d_pad if n_shards > 1 else None,
+                       slot_weights)
 
 
 def _round_impl(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
-                slot_tasks, *, cfg: EngineConfig, mode: str, d: int,
+                slot_tasks, slot_weights=None, *, cfg: EngineConfig,
+                mode: str, d: int,
                 mesh: Optional[Mesh] = None,
                 axes: Tuple[str, ...] = (),
                 axis_sizes: Tuple[int, ...] = ()):
     """The whole server step, traced once per (shapes, mode, d, mesh).
     The mask dtype selects the wire-format (uint32) or bool A/B path;
     with a (mesh, taskvec axes) pair the op runs under ``shard_map``
-    per the engine's sharding contract."""
+    per the engine's sharding contract.  ``slot_weights`` (async
+    staleness discount, replicated under a mesh) pre-scales λ and sizes
+    inside ``ops`` — omitted entirely from the trace when None, so the
+    synchronous jit programs are untouched."""
     kw = dict(rho=cfg.rho, eps=cfg.eps, kappa=cfg.kappa,
               cross_task=cfg.cross_task, uniform_cross=cfg.uniform_cross,
               mode=mode)
     packed = slot_masks.dtype == jnp.uint32
     n_shards = int(np.prod(axis_sizes)) if axes else 1
     if mesh is None or n_shards == 1:
+        kw["slot_weights"] = slot_weights
         if packed:
             return ops.matu_round_slots_packed(
                 unified, slot_masks, slot_lams, slot_sizes, slot_valid,
@@ -568,22 +627,28 @@ def _round_impl(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
     kw.update(axis_name=axes, axis_sizes=axis_sizes, d_norm=d)
 
     if packed:
-        def body(u, m, lam, sz, val, tid):
+        def body(u, m, lam, sz, val, tid, *w):
             return ops.matu_round_slots_packed(
-                u, m, lam, sz, val, tid, cfg.n_tasks, d_local, **kw)
+                u, m, lam, sz, val, tid, cfg.n_tasks, d_local,
+                slot_weights=w[0] if w else None, **kw)
         # (tv, τ̂, α_num, n_held, sim, down_uni, down_words, down_lams)
         out_specs = (s2, s2, s2, rep, rep, s2, s3, rep)
     else:
-        def body(u, m, lam, sz, val, tid):
+        def body(u, m, lam, sz, val, tid, *w):
             return ops.matu_round_slots(
-                u, m, lam, sz, val, tid, cfg.n_tasks, **kw)
+                u, m, lam, sz, val, tid, cfg.n_tasks,
+                slot_weights=w[0] if w else None, **kw)
         # (tv, τ̂, m̂, sim, down_uni, down_masks, down_lams)
         out_specs = (s2, s2, s2, rep, s2, s3, rep)
 
-    return shard_map(body, mesh=mesh,
-                     in_specs=(s2, s3, rep, rep, rep, rep),
-                     out_specs=out_specs, check_rep=False)(
-        unified, slot_masks, slot_lams, slot_sizes, slot_valid, slot_tasks)
+    in_specs = (s2, s3, rep, rep, rep, rep)
+    operands = (unified, slot_masks, slot_lams, slot_sizes, slot_valid,
+                slot_tasks)
+    if slot_weights is not None:
+        in_specs += (rep,)
+        operands += (slot_weights,)
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)(*operands)
 
 
 class RoundEngine:
@@ -624,9 +689,13 @@ class RoundEngine:
                 f"run_packed: batch padded to d={packed.padded_d} but the "
                 f"engine's mesh shards {self.n_shards} ways (wants {d_pad}) "
                 f"— pack with the same mesh the engine holds")
-        out = self._impl(mode, packed.d)(
-            packed.unified, packed.slot_masks, packed.slot_lams,
-            packed.slot_sizes, packed.slot_valid, packed.slot_tasks)
+        args = (packed.unified, packed.slot_masks, packed.slot_lams,
+                packed.slot_sizes, packed.slot_valid, packed.slot_tasks)
+        if packed.slot_weights is not None:
+            # the weighted trace is a separate jit entry (extra operand)
+            # — the synchronous program is never re-traced or perturbed
+            args += (packed.slot_weights,)
+        out = self._impl(mode, packed.d)(*args)
         if d_pad != packed.d:
             out = _slice_outputs(out, packed.d, packed.packed)
         if packed.packed:
@@ -687,15 +756,32 @@ class RoundEngine:
 
     def round(self, uploads: Sequence[ClientUpload], *,
               mode: Optional[str] = None, packed: bool = True,
-              code_masks: bool = False
+              code_masks: bool = False,
+              staleness: Optional[Sequence[int]] = None,
+              staleness_discount: float = STALENESS_DISCOUNT
               ) -> Tuple[Dict[int, ClientDownlink], EngineOutput]:
         """Pack → run → unpack: the drop-in replacement for the legacy
         per-task Python loop in ``MaTUServer.round``.  ``packed=False``
         runs the bool/fp32 A/B layout; ``code_masks=True`` emits
         entropy-coded downlink masks (coded uploads are accepted and
-        decoded by ``pack_uploads`` regardless of this flag)."""
+        decoded by ``pack_uploads`` regardless of this flag).
+
+        ``staleness`` (one int per upload, async buffered rounds)
+        attaches the per-slot discount ``staleness_discount**s`` to the
+        round — see "Async & fault model" in the module docstring."""
         batch = pack_uploads(uploads, self.cfg.n_tasks, packed=packed,
                              mesh=self.mesh)
+        if staleness is not None:
+            n_max, k_max = batch.slot_valid.shape
+            w = np.ones((n_max, k_max), np.float32)
+            w[:len(uploads)] = (np.float32(staleness_discount)
+                                ** np.asarray(staleness,
+                                              np.float32))[:, None]
+            if self.n_shards > 1:
+                batch.slot_weights = jax.device_put(
+                    w, NamedSharding(self.mesh, P()))
+            else:
+                batch.slot_weights = jnp.asarray(w)
         out = self.run_packed(batch, mode=mode)
         return self.downlinks(batch, out, code_masks=code_masks), out
 

@@ -59,11 +59,20 @@ class MaTUServer:
         self.engine.use_mesh(mesh)
 
     def round(self, uploads: List[ClientUpload], *,
-              code_masks: bool = False) -> Dict[int, ClientDownlink]:
+              code_masks: bool = False,
+              staleness: Optional[List[int]] = None
+              ) -> Dict[int, ClientDownlink]:
         """One server step through the batched round engine.
         ``code_masks`` emits entropy-coded downlink mask streams
-        (coded uploads are decoded at pack time either way)."""
-        downs, out = self.engine.round(uploads, code_masks=code_masks)
+        (coded uploads are decoded at pack time either way).
+
+        ``staleness`` (async buffered rounds: one int per upload, the
+        rounds elapsed since the upload was dispatched) folds late
+        uploads with the staleness-discounted λ — see "Async & fault
+        model" in the engine module docstring.  None (every synchronous
+        caller) keeps the sync jit programs byte-for-byte."""
+        downs, out = self.engine.round(uploads, code_masks=code_masks,
+                                       staleness=staleness)
         self._record(out)
         return downs
 

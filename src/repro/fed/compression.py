@@ -115,6 +115,19 @@ _POLARITY_BIT = 0x01
 _RAW_BIT = 0x02
 _K_SHIFT = 3
 
+
+class CodedStreamError(ValueError):
+    """A coded byte stream failed validation during decode.
+
+    Raised (instead of a mis-decode, IndexError, or silent garbage) for
+    every malformed-input class an adversarial or fault-injected wire
+    can produce: truncated header, truncated raw-escape payload,
+    truncated unary/remainder sections, a run count whose positions
+    point past ``d``, and trailing bytes after the expected row count.
+    Subclasses ``ValueError`` so pre-existing callers that caught that
+    still work; the async round server catches THIS type to quarantine
+    the upload (see ``repro.fed.systems``)."""
+
 # Streaming bounds for the batched coder.  Chunks keep every numpy
 # intermediate a few MB — far below glibc's mmap threshold — so the
 # allocator hands back the SAME warm pages chunk after chunk instead of
@@ -260,7 +273,7 @@ def rice_decode_words(stream: np.ndarray, d: int
     header."""
     stream = np.asarray(stream, np.uint8).ravel()
     if stream.size < HEADER_BYTES:
-        raise ValueError("rice_decode_words: truncated header")
+        raise CodedStreamError("rice_decode_words: truncated header")
     flags = int(stream[0])
     polarity = flags & _POLARITY_BIT
     w = packed_width(d)
@@ -272,7 +285,7 @@ def rice_decode_words(stream: np.ndarray, d: int
         end = HEADER_BYTES + 4 * w
         words = stream[HEADER_BYTES:end].view("<u4").astype(np.uint32)
         if words.size != w:
-            raise ValueError("rice_decode_words: truncated raw payload")
+            raise CodedStreamError("rice_decode_words: truncated raw payload")
         return words, end
     k = flags >> _K_SHIFT
     n = int(stream[1:5].view("<u4")[0])
@@ -283,7 +296,7 @@ def rice_decode_words(stream: np.ndarray, d: int
     payload_bits = np.unpackbits(stream[HEADER_BYTES:], bitorder="little")
     ones = np.flatnonzero(payload_bits)
     if ones.size < n:
-        raise ValueError("rice_decode_words: truncated unary section")
+        raise CodedStreamError("rice_decode_words: truncated unary section")
     ends = ones[:n]                                  # unary terminators
     qs = np.diff(ends, prepend=-1) - 1
     unary_len = int(ends[-1]) + 1
@@ -291,11 +304,11 @@ def rice_decode_words(stream: np.ndarray, d: int
     if k:
         rem = payload_bits[unary_len:unary_len + n * k]
         if rem.size < n * k:
-            raise ValueError("rice_decode_words: truncated remainders")
+            raise CodedStreamError("rice_decode_words: truncated remainders")
         gaps += rem.reshape(n, k) @ (1 << np.arange(k, dtype=np.int64))
     positions = np.cumsum(gaps + 1) - 1
     if positions[-1] >= d:
-        raise ValueError("rice_decode_words: position beyond d")
+        raise CodedStreamError("rice_decode_words: position beyond d")
     bits = np.zeros(d, bool) if polarity else np.ones(d, bool)
     bits[positions] = bool(polarity)
     consumed = HEADER_BYTES + -(-(unary_len + n * k) // 8)
@@ -327,7 +340,7 @@ def decode_mask_rows_reference(stream: np.ndarray, d: int, k: int
         out[i] = row
         off += used
     if off != stream.size:
-        raise ValueError(f"decode_mask_rows: {stream.size - off} trailing "
+        raise CodedStreamError(f"decode_mask_rows: {stream.size - off} trailing "
                          f"bytes after {k} rows")
     return out
 
@@ -564,7 +577,7 @@ def _decode_rice_chunk(stream: np.ndarray, out: np.ndarray, d: int,
     positions -= before[seg]
     positions -= 1
     if int(positions[np.cumsum(n) - 1].max()) >= d:
-        raise ValueError("rice_decode_words: position beyond d")
+        raise CodedStreamError("rice_decode_words: position beyond d")
     # scatter the coded symbol's positions, pack, then flip rows whose
     # polarity coded the CLEAR bits at the word level (tail bits reset)
     dense = np.zeros((nr, d), bool)
@@ -596,7 +609,7 @@ def decode_mask_rows(stream: np.ndarray, d: int, k: int) -> np.ndarray:
     out = np.empty((k, w), np.uint32)
     if k == 0:
         if stream.size:
-            raise ValueError(f"decode_mask_rows: {stream.size} trailing "
+            raise CodedStreamError(f"decode_mask_rows: {stream.size} trailing "
                              "bytes after 0 rows")
         return out
 
@@ -611,12 +624,12 @@ def decode_mask_rows(stream: np.ndarray, d: int, k: int) -> np.ndarray:
     off = 0
     for i in range(k):
         if off + HEADER_BYTES > stream.size:
-            raise ValueError("rice_decode_words: truncated header")
+            raise CodedStreamError("rice_decode_words: truncated header")
         flags = int(stream[off])
         pol = flags & _POLARITY_BIT
         if flags & _RAW_BIT:
             if off + HEADER_BYTES + 4 * w > stream.size:
-                raise ValueError("rice_decode_words: truncated raw payload")
+                raise CodedStreamError("rice_decode_words: truncated raw payload")
             raw_rows.append(i)
             raw_offs.append(off + HEADER_BYTES)
             off += HEADER_BYTES + 4 * w
@@ -631,14 +644,14 @@ def decode_mask_rows(stream: np.ndarray, d: int, k: int) -> np.ndarray:
         lim_byte = min(stream.size, pb_byte + 4 * w)
         target = int(cpc[pb_byte]) + n
         if target > int(cpc[lim_byte]):
-            raise ValueError("rice_decode_words: truncated unary section")
+            raise CodedStreamError("rice_decode_words: truncated unary section")
         # byte holding the n-th one-bit after pb, then the bit within it
         jbyte = int(np.searchsorted(cpc, target, side="left")) - 1
         bit = int(_NTH_ONE[stream[jbyte], target - int(cpc[jbyte]) - 1])
         kk = flags >> _K_SHIFT
         unary = 8 * (jbyte - pb_byte) + bit + 1
         if unary + n * kk > 8 * (lim_byte - pb_byte):
-            raise ValueError("rice_decode_words: truncated remainders")
+            raise CodedStreamError("rice_decode_words: truncated remainders")
         rice["row"].append(i)
         rice["kk"].append(kk)
         rice["n"].append(n)
@@ -648,7 +661,7 @@ def decode_mask_rows(stream: np.ndarray, d: int, k: int) -> np.ndarray:
         off += HEADER_BYTES + -(-(unary + n * kk) // 8)
         rice["end"].append(off)
     if off != stream.size:
-        raise ValueError(f"decode_mask_rows: {stream.size - off} trailing "
+        raise CodedStreamError(f"decode_mask_rows: {stream.size - off} trailing "
                          f"bytes after {k} rows")
 
     # phase 2: vectorized reconstruction

@@ -4,13 +4,44 @@ Runs R rounds of: client sampling (ξ) → per-(client, task) local
 fine-tuning in flat task-vector space → strategy aggregation → global
 per-task head averaging → periodic evaluation.  Produces the metrics
 the paper reports: per-task accuracy, averages, and bits/round.
+
+Async & fault model
+-------------------
+Passing ``systems=ClientSystems(...)`` switches the loop to the
+event-clock mode: each round is a tick, sampled clients still train,
+but their uploads land in an :class:`~repro.fed.systems.AdmissionQueue`
+with an arrival tick of ``dispatch + systems.delay(c, r)`` and the
+server drains whatever has ARRIVED by the current tick.  Crashed
+clients are never sampled, dropouts train but never upload, and
+uploads older than ``FedConfig.max_staleness`` rounds are discarded as
+stale.  Drained uploads are folded with the staleness-discounted λ
+(``w = STALENESS_DISCOUNT**s``; see the engine docstring) when the
+strategy supports ``aggregate_admitted``; a round that drains nothing
+calls ``strategy.skip_round()`` and records a 0-bit History row
+instead of crashing.  Per-round fault/staleness/quarantine counters
+land in ``History.fault_counts`` (same keys in sync mode, where every
+round reports ``sampled == admitted`` and zeros elsewhere).
+
+Equivalence anchor: under ``ClientSystems.ideal(n)`` (always
+available, zero latency, zero faults) every upload arrives within its
+dispatch tick in selection order, staleness is uniformly 0 (w = 1
+exactly, and the slot-weight multiply is never traced), so the async
+run is **bit-identical** to the sync run — unified vectors, λ,
+downlinks, and measured wire bits.
+
+RNG keys are failure-invariant by construction: selection draws from
+``fold_in(fold_in(base, 0), round)`` and client c's training keys from
+``fold_in``-chains over (base, 1, c, round, task) — never from a
+sequentially split stream — so injecting a fault for one client cannot
+perturb any other client's draws (the satellite regression in
+tests/test_systems.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +51,8 @@ from repro.data.dirichlet import FedSplit
 from repro.data.synthetic import Constellation, eval_batch, sample_task_batch
 from repro.fed.local import make_head, make_local_trainer
 from repro.fed.strategies import RoundBatch, Strategy, Upload
+from repro.fed.systems import (AdmissionQueue, ClientSystems,
+                               blank_fault_counters)
 
 
 @dataclass
@@ -38,6 +71,10 @@ class FedConfig:
     # per-client strategies).  Bit-identical to False — same ops,
     # different order (tests/test_pipeline.py).
     pipeline: bool = False
+    # async mode only: buffered uploads older than this many rounds are
+    # discarded as stale instead of admitted (counted in
+    # History.fault_counts["stale"])
+    max_staleness: int = 4
 
 
 @dataclass
@@ -59,6 +96,23 @@ class History:
     # recently COMPLETED round at the time round r was recorded — one
     # behind the in-flight round.
     phase_us: List[Dict[str, float]] = field(default_factory=list)
+    # one dict per ROUND (every round, not just eval rounds) with the
+    # repro.fed.systems.FAULT_KEYS counters: clients sampled / dropped
+    # / crashed (unavailable) / straggling, uploads discarded stale,
+    # uploads quarantined by the validating decode, uploads still
+    # buffered after the drain, uploads admitted to the server step,
+    # and skipped (1 when the round admitted nothing).  Sync rounds
+    # report sampled == admitted and zeros elsewhere.
+    fault_counts: List[Dict[str, int]] = field(default_factory=list)
+
+    @property
+    def total_fault_counts(self) -> Dict[str, int]:
+        """Sum of the per-round fault counters over the whole run."""
+        out = blank_fault_counters()
+        for c in self.fault_counts:
+            for k, v in c.items():
+                out[k] = out.get(k, 0) + int(v)
+        return out
 
     @property
     def final_task_acc(self) -> Dict[int, float]:
@@ -94,22 +148,32 @@ class History:
 class FedSimulator:
     def __init__(self, cfg: FedConfig, constellation: Constellation,
                  split: FedSplit, backbone, strategy: Strategy,
-                 mesh=None):
+                 mesh=None, systems: Optional[ClientSystems] = None):
         """``mesh``: optional jax Mesh threaded to the strategy — MaTU
         then runs its server round sharded over the taskvec axis (the
         engine's sharding contract); the simulation loop itself is
-        unchanged, so the same script runs on 1 device and on N."""
+        unchanged, so the same script runs on 1 device and on N.
+
+        ``systems``: optional :class:`~repro.fed.systems.ClientSystems`
+        event-clock trace — switches ``run`` to the async buffered mode
+        (see "Async & fault model" in the module docstring).  Under
+        ``ClientSystems.ideal`` the async run is bit-identical to
+        ``systems=None``."""
         self.cfg = cfg
         self.con = constellation
         self.split = split
         self.backbone = backbone
         self.strategy = strategy
         self.mesh = mesh
+        self.systems = systems
         if mesh is not None:
             strategy.use_mesh(mesh)
         strategy.use_pipeline(cfg.pipeline)
         self.rng = jax.random.PRNGKey(cfg.seed)
         self.n_clients = len(split.tasks)
+        if systems is not None and systems.n_clients != self.n_clients:
+            raise ValueError(f"systems models {systems.n_clients} clients, "
+                             f"split has {self.n_clients}")
 
         self.trainer = make_local_trainer(
             backbone, steps=cfg.local_steps, batch_size=cfg.batch_size,
@@ -149,48 +213,138 @@ class FedSimulator:
             out[t] = float(np.mean([self.task_accuracy(t, v) for v in vecs]))
         return out
 
+    # -- local training -----------------------------------------------------
+    def _train_client(self, c: int, r: int, train_base: jax.Array
+                      ) -> Tuple[Upload, List[tuple]]:
+        """Run client ``c``'s per-task local fine-tuning for round
+        ``r``.  Training keys derive from fold_in chains over (c, r, t)
+        only — failure-invariant: another client's faults can never
+        shift them (see module docstring)."""
+        ck = jax.random.fold_in(jax.random.fold_in(train_base, c), r)
+        tvs, sizes, head_pairs = [], [], []
+        for t in self.split.tasks[c]:
+            tk = jax.random.fold_in(ck, t)
+            x, y = self.local_data[(c, t)]
+            tv0 = self.strategy.task_init(c, t)
+            tv, head, _loss = self.trainer(tv0, self.heads[t], x, y, tk)
+            tvs.append(tv)
+            sizes.append(self.split.data_sizes[(c, t)])
+            head_pairs.append((t, head, sizes[-1]))
+        return (Upload(c, list(self.split.tasks[c]), jnp.stack(tvs), sizes),
+                head_pairs)
+
     # -- main loop ------------------------------------------------------------
     def run(self, verbose: bool = False) -> History:
         cfg = self.cfg
         hist = History()
         n_sel = max(1, int(round(cfg.participation * self.n_clients)))
+        # failure-invariant key schedule: selection draws and per-client
+        # training keys come from fold_in chains over disjoint
+        # sub-bases, never from one sequentially split stream
+        sel_base = jax.random.fold_in(self.rng, 0)
+        train_base = jax.random.fold_in(self.rng, 1)
+        sysm = self.systems
+        queue = AdmissionQueue() if sysm is not None else None
 
         for r in range(cfg.rounds):
-            self.rng, sk = jax.random.split(self.rng)
-            selected = np.asarray(
-                jax.random.choice(sk, self.n_clients, (n_sel,), replace=False))
+            counters = blank_fault_counters()
+            sk = jax.random.fold_in(sel_base, r)
+            if sysm is None:
+                selected = np.asarray(jax.random.choice(
+                    sk, self.n_clients, (n_sel,), replace=False))
+            else:
+                avail = [c for c in range(self.n_clients)
+                         if sysm.available(c, r)]
+                counters["crashed"] = self.n_clients - len(avail)
+                if len(avail) == self.n_clients:
+                    # IDENTICAL draw to the sync branch — the
+                    # ideal-trace bit-parity anchor
+                    selected = np.asarray(jax.random.choice(
+                        sk, self.n_clients, (n_sel,), replace=False))
+                elif avail:
+                    k = min(n_sel, len(avail))
+                    idx = np.asarray(jax.random.choice(
+                        sk, len(avail), (k,), replace=False))
+                    selected = np.asarray(avail, np.int64)[idx]
+                else:
+                    selected = np.asarray([], np.int64)
+            counters["sampled"] = int(len(selected))
 
-            uploads: List[Upload] = []
-            new_heads: Dict[int, list] = {}
+            # train sampled clients; sync admits in place, async pushes
+            # into the admission queue with the trace's arrival tick
+            admitted: List[Upload] = []
+            head_lists: List[list] = []
+            staleness: List[int] = []
+            dispatch_rounds: List[int] = []
             for c in selected:
                 c = int(c)
-                tvs, sizes = [], []
-                for t in self.split.tasks[c]:
-                    self.rng, tk = jax.random.split(self.rng)
-                    x, y = self.local_data[(c, t)]
-                    tv0 = self.strategy.task_init(c, t)
-                    tv, head, _loss = self.trainer(tv0, self.heads[t], x, y, tk)
-                    tvs.append(tv)
-                    sizes.append(self.split.data_sizes[(c, t)])
-                    new_heads.setdefault(t, []).append((head, sizes[-1]))
-                uploads.append(Upload(c, list(self.split.tasks[c]),
-                                      jnp.stack(tvs), sizes))
+                if sysm is not None and sysm.dropout(c, r):
+                    counters["dropped"] += 1
+                    continue
+                upload, head_pairs = self._train_client(c, r, train_base)
+                if sysm is None:
+                    admitted.append(upload)
+                    head_lists.append(head_pairs)
+                    staleness.append(0)
+                else:
+                    delay = sysm.delay(c, r)
+                    if delay > 0:
+                        counters["stragglers"] += 1
+                    queue.push(r + delay, r, (upload, head_pairs))
+            if sysm is not None:
+                for item in queue.pop_ready(r):
+                    upload, head_pairs = item.payload
+                    s = r - item.dispatch
+                    if s > cfg.max_staleness:
+                        counters["stale"] += 1
+                        continue
+                    admitted.append(upload)
+                    head_lists.append(head_pairs)
+                    staleness.append(s)
+                    dispatch_rounds.append(item.dispatch)
+                counters["buffered"] = len(queue)
+            counters["admitted"] = len(admitted)
 
-            # hand the strategy ONE pre-packed batch: batched strategies
-            # (MaTU's round engine) consume the padded tensors directly,
-            # per-client strategies unwrap the ragged uploads list
-            self.strategy.aggregate_batch(RoundBatch.from_uploads(
-                uploads, self.con.n_tasks))
+            if not admitted:
+                # nothing reached the server this tick: skip-and-carry
+                # (History still gets a full 0-bit row for the round)
+                counters["skipped"] = 1
+                self.strategy.skip_round()
+            elif hasattr(self.strategy, "aggregate_admitted"):
+                self.strategy.aggregate_admitted(
+                    RoundBatch.from_uploads(admitted, self.con.n_tasks),
+                    staleness, sysm,
+                    dispatch_rounds if sysm is not None else None)
+            else:
+                # hand the strategy ONE pre-packed batch: batched
+                # strategies (MaTU's round engine) consume the padded
+                # tensors directly, per-client strategies unwrap the
+                # ragged uploads list
+                self.strategy.aggregate_batch(RoundBatch.from_uploads(
+                    admitted, self.con.n_tasks))
+            quarantined = getattr(self.strategy, "last_quarantined",
+                                  frozenset())
+            counters["quarantined"] = len(quarantined)
+            hist.fault_counts.append(counters)
             # under pipeline=True the dispatched round is still in
             # flight here: this snapshot is the most recently completed
             # round's phases (see History.phase_us)
             hist.phase_us.append(dict(self.strategy.last_phase_us or {}))
+
+            # head averaging over the round's ADMITTED, non-quarantined
+            # uploads (drain order == selection order in sync/ideal)
+            new_heads: Dict[int, list] = {}
+            for upload, pairs in zip(admitted, head_lists):
+                if upload.client_id in quarantined:
+                    continue
+                for t, head, size in pairs:
+                    new_heads.setdefault(t, []).append((head, size))
             for t, pairs in new_heads.items():
                 w = jnp.asarray([p[1] for p in pairs], jnp.float32)
                 w = w / jnp.sum(w)
                 self.heads[t] = sum(wi * h for (h, _), wi in zip(pairs, w))
 
-            bits = self.strategy.uplink_bits(uploads)
+            bits = self.strategy.uplink_bits(admitted)
             if (r + 1) % cfg.eval_every == 0 or r == cfg.rounds - 1:
                 acc = self.evaluate()
                 hist.rounds.append(r + 1)

@@ -26,11 +26,11 @@ import numpy as np
 from repro.core.baselines import (cosine_similarity_matrix, greedy_group,
                                   ties_merge, weighted_average)
 from repro.core.client import ClientDownlink, ClientUpload
-from repro.core.engine import (batched_client_unify, pack_from_slots,
-                               _round_up_pow2)
+from repro.core.engine import (STALENESS_DISCOUNT, batched_client_unify,
+                               pack_from_slots, _round_up_pow2)
 from repro.kernels import bitpack
 from repro.core.server import MaTUServer, MaTUServerConfig
-from repro.core.unify import modulate
+from repro.core.unify import modulate, unify_with_modulators
 
 FLOAT_BITS = 32
 
@@ -142,6 +142,13 @@ class Strategy:
         that support it (MaTU overlaps the dispatched round with host
         bookkeeping); the default is a no-op so per-client strategies
         ignore it."""
+
+    def skip_round(self) -> None:
+        """Called INSTEAD of ``aggregate_batch`` when a round admits no
+        uploads (every sampled client dropped out, crashed, or went
+        stale): carry all server state unchanged so the simulator can
+        record a 0-bit History row and keep going.  The default is a
+        no-op — stateless-per-round strategies already carry."""
 
     def eval_vectors(self, task_id: int) -> List[jax.Array]:
         raise NotImplementedError
@@ -291,6 +298,16 @@ class MaTUStrategy(Strategy):
         if not self.pipeline:
             self._drain()
 
+    def skip_round(self) -> None:
+        """Empty round: drain any in-flight round, then clear the
+        per-round wire accounting so ``uplink_bits`` / ``downlink_bits``
+        report 0 for the skipped round.  The unified per-task vectors,
+        similarity, and every client's cached downlink stay exactly as
+        the last aggregated round left them (skip-and-carry)."""
+        self._drain()
+        self._last_uploads = []
+        self.last_phase_us = {}
+
     def eval_vectors(self, task_id: int) -> List[jax.Array]:
         return [self.server.last_task_vectors[task_id]]
 
@@ -320,6 +337,226 @@ class MaTUStrategy(Strategy):
         return sum(self.downlinks[u.client_id].downlink_bits()
                    for u in self._last_uploads
                    if u.client_id in self.downlinks)
+
+
+# ---------------------------------------------------------------------------
+class AsyncMaTUStrategy(MaTUStrategy):
+    """Buffered, staleness-aware, fault-tolerant MaTU server step for
+    the async simulator mode (``FedSimulator(..., systems=...)``).
+
+    Extends :class:`MaTUStrategy` with the four async concerns:
+
+    * **staleness-discounted λ** — an admitted upload dispatched at
+      round q and folded at round r carries staleness ``s = r − q``;
+      its slots enter Eq. 3 with weight ``w = staleness_discount**s``
+      (``PackedRound.slot_weights``, applied inside the jitted round as
+      λ·w and size·w).  ``s = 0`` gives w = 1 exactly, which together
+      with the sync-identical drain order makes the ideal-trace async
+      round bit-identical to the sync path.
+    * **validating decode + quarantine** — when the trace can corrupt
+      (``systems.injects_corruption``), each client's coded stream is
+      CRC-framed (``repro.fed.systems.wrap_stream``), tampered per the
+      fault model, then validated (frame check + full entropy decode);
+      uploads raising :class:`~repro.fed.systems.WireFrameError` or
+      :class:`~repro.fed.compression.CodedStreamError` are quarantined:
+      left out of the packed round entirely (their client ids are in
+      ``last_quarantined``; their bytes still count as uplink traffic).
+    * **dark-task carry + decay** — per-task last-seen vectors: a task
+      aggregated this round refreshes bitwise (age 0); a dark task ages
+      and decays toward the unified vector of the seen tasks,
+      ``τ_t ← (1 − β)·τ_t + β·unify(seen τ)`` (``β = dark_decay``), so
+      ``eval_vectors`` and the carried ``similarity`` stay well-posed
+      through long dark spells instead of collapsing to the engine's
+      zero rows.
+    * **skip-and-carry** — an all-quarantined or empty round advances
+      the ages and carries every other state unchanged.
+    """
+    name = "matu-async"
+
+    def __init__(self, n_tasks: int, d: int, *,
+                 staleness_discount: float = STALENESS_DISCOUNT,
+                 dark_decay: float = 0.25, **kw):
+        super().__init__(n_tasks, d, **kw)
+        self.staleness_discount = float(staleness_discount)
+        self.dark_decay = float(dark_decay)
+        # rounds since each task was last aggregated (0 = this round)
+        self.task_age = np.zeros(n_tasks, np.int64)
+        self._task_seen = np.zeros(n_tasks, bool)
+        self._task_vecs = jnp.zeros((n_tasks, d), jnp.float32)
+        self.last_quarantined: frozenset = frozenset()
+
+    # -- carried per-task state ---------------------------------------------
+    def _age_and_decay(self, held, decay: bool = True) -> None:
+        """Refresh ages for ``held`` tasks; age every dark task and pull
+        the ever-seen dark ones toward the unified vector of the seen
+        task stack (the decay target the engine docstring documents).
+        ``decay=False`` (skipped / all-quarantined rounds, where no
+        engine round ran) only advances the ages — pure carry."""
+        dark = np.ones(self.n_tasks, bool)
+        if held:
+            held_idx = np.asarray(sorted(held), np.int64)
+            dark[held_idx] = False
+            self.task_age[held_idx] = 0
+            self._task_seen[held_idx] = True
+        self.task_age[dark] += 1
+        decay_idx = np.flatnonzero(dark & self._task_seen) if decay \
+            else np.empty(0, np.int64)
+        if decay_idx.size:
+            seen_rows = jnp.asarray(np.flatnonzero(self._task_seen))
+            u = unify_with_modulators(self._task_vecs[seen_rows])[0]
+            beta = self.dark_decay
+            rows = jnp.asarray(decay_idx)
+            self._task_vecs = self._task_vecs.at[rows].set(
+                (1.0 - beta) * self._task_vecs[rows] + beta * u[None, :])
+
+    @property
+    def similarity(self) -> np.ndarray:
+        """Carried Eq. 5 sign-similarity over the last-seen task
+        vectors — rows for dark tasks decay toward the unified vector's
+        row (never NaN, never the engine's hard zeros).  Computed
+        lazily on the host so reading it is the only sync point."""
+        v = np.asarray(self._task_vecs)
+        s = np.sign(v)
+        sim = 0.5 * ((s @ s.T) / max(v.shape[1], 1) + 1.0)
+        seen = self._task_seen.astype(np.float32)
+        return (sim * seen[None, :] * seen[:, None]).astype(np.float32)
+
+    def eval_vectors(self, task_id: int) -> List[jax.Array]:
+        return [self._task_vecs[task_id]]
+
+    def skip_round(self) -> None:
+        super().skip_round()
+        self.last_quarantined = frozenset()
+        self._age_and_decay(set(), decay=False)
+
+    def aggregate_batch(self, batch: RoundBatch) -> None:
+        self.aggregate_admitted(batch, [0] * len(batch.uploads))
+
+    def aggregate_admitted(self, batch: RoundBatch, staleness: List[int],
+                           systems=None,
+                           dispatch_rounds: Optional[List[int]] = None
+                           ) -> int:
+        """Server step over the admission queue's drain: validate (and
+        possibly quarantine) each upload, then run the engine round
+        over the survivors with the staleness-discounted slot weights.
+        Returns the number of uploads actually aggregated (0 when every
+        admitted upload was quarantined — the caller should treat that
+        like a skipped round for head updates)."""
+        self._drain()
+        inject = (systems is not None and systems.injects_corruption
+                  and dispatch_rounds is not None)
+        if inject and not self.code_masks:
+            raise ValueError("wire fault injection (corrupt_prob > 0) "
+                             "tampers the CODED mask streams — construct "
+                             "AsyncMaTUStrategy(code_masks=True)")
+        phase: Dict[str, float] = {}
+        t0 = time.perf_counter()
+        unified, mask_words, lams = batched_client_unify(
+            batch.task_vectors, batch.valid, mesh=self.mesh)
+        ks = [len(u.task_ids) for u in batch.uploads]
+        dw = bitpack.packed_width(self.d)
+        quarantined: List[int] = []
+        if self.code_masks:
+            from repro.fed.compression import (CodedStreamError,
+                                               decode_mask_rows,
+                                               encode_mask_rows_with_sizes)
+            t1 = time.perf_counter()
+            words_np = np.asarray(mask_words)
+            rows = words_np[np.repeat(np.arange(len(ks)), ks),
+                            np.concatenate([np.arange(k, dtype=np.int64)
+                                            for k in ks])][:, :dw]
+            stream, sizes = encode_mask_rows_with_sizes(rows, self.d)
+            ends = np.cumsum(sizes)
+            streams, b0, r0 = [], 0, 0
+            for k in ks:
+                b1 = int(ends[r0 + k - 1]) if k else b0
+                streams.append(stream[b0:b1])
+                b0, r0 = b1, r0 + k
+            phase["encode"] = (time.perf_counter() - t1) * 1e6
+            if inject:
+                from repro.fed.systems import (WireFrameError, unwrap_stream,
+                                               wrap_stream)
+                framed = [wrap_stream(s) for s in streams]
+                for i, u in enumerate(batch.uploads):
+                    if systems.corrupt(u.client_id, dispatch_rounds[i]):
+                        framed[i] = systems.tamper(framed[i], u.client_id,
+                                                   dispatch_rounds[i])
+                # validating decode: CRC frame first, then the full
+                # entropy decode — malformed uploads never reach the
+                # slot tensors
+                for i, k in enumerate(ks):
+                    try:
+                        decode_mask_rows(unwrap_stream(framed[i]),
+                                         self.d, k)
+                    except (WireFrameError, CodedStreamError):
+                        quarantined.append(i)
+                streams = framed
+            up_masks = [jnp.asarray(s) for s in streams]
+        else:
+            up_masks = [mask_words[i, :k, :dw] for i, k in enumerate(ks)]
+
+        # wire accounting covers every admitted upload — including the
+        # quarantined ones (their bytes travelled), framed when fault
+        # injection is active
+        self._last_uploads = [
+            ClientUpload(u.client_id, list(u.task_ids),
+                         unified[i, :self.d], up_masks[i],
+                         lams[i, :len(u.task_ids)], list(u.data_sizes))
+            for i, u in enumerate(batch.uploads)
+        ]
+        self.last_quarantined = frozenset(
+            batch.uploads[i].client_id for i in quarantined)
+
+        keep = [i for i in range(len(ks)) if i not in set(quarantined)]
+        if not keep:
+            # everything admitted this round was malformed: no engine
+            # round runs; carry state like a skipped round
+            self.last_phase_us = phase
+            self._age_and_decay(set(), decay=False)
+            return 0
+
+        cids = [batch.client_ids[i] for i in keep]
+        tids = [batch.task_ids[i] for i in keep]
+        stale = [int(staleness[i]) for i in keep]
+        if quarantined:
+            sel = jnp.asarray(np.asarray(keep, np.int64))
+            unified_k, words_k, lams_k = (unified[sel], mask_words[sel],
+                                          lams[sel])
+            tasks_k, valid_k, sizes_k = (batch.slot_tasks[sel],
+                                         batch.valid[sel],
+                                         batch.slot_sizes[sel])
+        else:
+            unified_k, words_k, lams_k = unified, mask_words, lams
+            tasks_k, valid_k, sizes_k = (batch.slot_tasks, batch.valid,
+                                         batch.slot_sizes)
+        slot_weights = None
+        if any(stale):
+            w = (np.float32(self.staleness_discount)
+                 ** np.asarray(stale, np.float32))
+            slot_weights = jnp.asarray(np.ascontiguousarray(
+                np.broadcast_to(w[:, None], (len(keep), batch.k_max))))
+        packed = pack_from_slots(cids, tids, unified_k, words_k, lams_k,
+                                 tasks_k, valid_k, sizes_k, self.n_tasks,
+                                 d=self.d, mesh=self.mesh,
+                                 slot_weights=slot_weights)
+        out = self.server.start_round(packed)     # async dispatch
+        t_disp = time.perf_counter()
+        phase["pack"] = (t_disp - t0) * 1e6 - phase.get("encode", 0.0)
+        for i in keep:
+            u = batch.uploads[i]
+            self.client_tasks[u.client_id] = list(u.task_ids)
+        self._pending = (packed, out, phase, t_disp)
+
+        # carried per-task state: held tasks refresh bitwise from the
+        # round output; dark tasks age and decay toward the unified
+        held = {t for i in keep for t in batch.task_ids[i]}
+        rows = jnp.asarray(sorted(held))
+        self._task_vecs = self._task_vecs.at[rows].set(
+            out.task_vectors[rows])
+        self._age_and_decay(held)
+        if not self.pipeline:
+            self._drain()
+        return len(keep)
 
 
 # ---------------------------------------------------------------------------
@@ -455,6 +692,7 @@ class MaTFLStrategy(Strategy):
 
 STRATEGIES = {
     "matu": MaTUStrategy,
+    "matu-async": AsyncMaTUStrategy,
     "fedavg": FedAvgStrategy,
     "fedprox": FedProxStrategy,
     "ntk-fedavg": NTKFedAvgStrategy,

@@ -318,11 +318,27 @@ def _round_slots_dense(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
             uni, dmasks > 0.5, num, den)
 
 
+def _apply_slot_weights(slot_lams, slot_sizes, slot_weights):
+    """Staleness-discount pre-scaling (async rounds): per-slot weights
+    w ∈ (0, 1] scale both the modulator λ (the slot's reconstructed
+    vector shrinks toward zero) and the γ size weight (the slot loses
+    share in the Eq. 3 normalization) BEFORE the weighted values enter
+    the masked-agg / λ block-partial kernels — so no kernel needs a new
+    operand.  ``w = 1`` is bitwise exact (IEEE multiply by 1.0), which
+    is what keeps the zero-staleness async round bit-identical to the
+    sync one."""
+    if slot_weights is None:
+        return slot_lams, slot_sizes
+    w = slot_weights.astype(jnp.float32)
+    return slot_lams * w, slot_sizes * w
+
+
 def matu_round_slots(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
                      slot_tasks, n_tasks: int, *, rho: float = 0.4,
                      eps: float = 0.5, kappa: int = 3,
                      cross_task: bool = True, uniform_cross: bool = False,
                      lam_eps: float = 1e-12, mode: Optional[str] = None,
+                     slot_weights=None,
                      axis_name=None, axis_sizes=(), d_norm: int = 0):
     """The full MaTU server round over slot-packed uploads — the single
     entry point of :class:`repro.core.engine.RoundEngine`.
@@ -339,8 +355,13 @@ def matu_round_slots(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
     contract): inputs are the local d-slice, ``d_norm`` is the global
     feature count, and the Eq. 5 dots + λ num/den totals are the only
     cross-shard collectives.
+
+    ``slot_weights`` (optional, (N, K) fp32) is the async staleness
+    discount — see :func:`_apply_slot_weights`.
     """
     mode = _norm(mode)
+    slot_lams, slot_sizes = _apply_slot_weights(slot_lams, slot_sizes,
+                                                slot_weights)
     kw = dict(rho=rho, eps=eps, kappa=kappa, cross_task=cross_task,
               uniform_cross=uniform_cross)
     if mode == "ref":
@@ -416,6 +437,7 @@ def matu_round_slots_packed(unified, slot_mask_words, slot_lams, slot_sizes,
                             uniform_cross: bool = False,
                             lam_eps: float = 1e-12,
                             mode: Optional[str] = None,
+                            slot_weights=None,
                             axis_name=None, axis_sizes=(), d_norm: int = 0):
     """The full MaTU server round over wire-format slot uploads — the
     default entry point of :class:`repro.core.engine.RoundEngine`.
@@ -438,8 +460,13 @@ def matu_round_slots_packed(unified, slot_mask_words, slot_lams, slot_sizes,
     ``shard_map`` body over the taskvec axis — ``d`` is then the LOCAL
     unpacked count of this shard's slice (a multiple of 32; see the
     engine's sharding contract) and ``d_norm`` the global one.
+
+    ``slot_weights`` (optional, (N, K) fp32) is the async staleness
+    discount — see :func:`_apply_slot_weights`.
     """
     mode = _norm(mode)
+    slot_lams, slot_sizes = _apply_slot_weights(slot_lams, slot_sizes,
+                                                slot_weights)
     kw = dict(rho=rho, eps=eps, kappa=kappa, cross_task=cross_task,
               uniform_cross=uniform_cross)
     if mode == "ref":

@@ -1,0 +1,317 @@
+"""Fault-tolerant async MaTU rounds (simulator systems mode +
+AsyncMaTUStrategy).
+
+The scientific anchor: under ``ClientSystems.ideal`` the async buffered
+path is BIT-identical to the sync ``FedSimulator.run`` — unified
+vectors, λ, measured wire bits, History — for both packed layouts (raw
+words and coded streams).  Plus the fault suite from the issue: 30%
+dropout + stragglers with staleness cap 4 completes every round and
+stays within 2 accuracy points of fault-free; injected corrupted
+streams are 100% quarantined and counted; empty rounds skip-and-carry
+with a 0-bit History row; staleness-discounted λ actually changes the
+merge; fault counters and phase timings are recorded sync and async.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fed.simulator import FedConfig, FedSimulator
+from repro.fed.strategies import (AsyncMaTUStrategy, MaTUStrategy,
+                                  RoundBatch, STRATEGIES, Upload)
+from repro.fed.systems import ClientSystems, FaultModel
+
+jax.config.update("jax_platform_name", "cpu")
+
+N_TASKS = 5
+
+
+def _setting():
+    from repro.data.dirichlet import dirichlet_split
+    from repro.data.synthetic import make_constellation
+    from repro.fed.testbed import MLPBackbone
+    con = make_constellation(n_tasks=N_TASKS, n_groups=2, feat_dim=16,
+                             n_classes=4, seed=0)
+    split = dirichlet_split(n_clients=5, n_tasks=N_TASKS, n_classes=4,
+                            zeta_t=0.5, tasks_per_client=2, seed=0)
+    bb = MLPBackbone(16, hidden=24, lora_rank=4)
+    return con, split, bb
+
+
+def _cfg(**kw):
+    base = dict(rounds=4, participation=1.0, local_steps=2, batch_size=16,
+                local_data=64, eval_every=2)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+# -- the equivalence anchor ---------------------------------------------------
+
+@pytest.mark.parametrize("mode_env", ["ref", "pallas_interpret"])
+@pytest.mark.parametrize("code_masks", [False, True])
+def test_async_ideal_trace_bit_parity(code_masks, mode_env, monkeypatch):
+    """Async with the always-available / zero-latency / zero-fault
+    trace ≡ sync, bit for bit: accuracies, unified per-task vectors,
+    per-client wire buffers (unified bf16 + masks + λ), and the
+    measured up/downlink bits — for both packed layouts, under both
+    dispatch modes."""
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    monkeypatch.setenv("REPRO_DISABLE_PALLAS", "1")
+    if mode_env == "pallas_interpret":
+        monkeypatch.delenv("REPRO_DISABLE_PALLAS", raising=False)
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    con, split, bb = _setting()
+    cfg = _cfg()
+
+    s_sync = MaTUStrategy(con.n_tasks, bb.d, code_masks=code_masks)
+    h_sync = FedSimulator(cfg, con, split, bb, s_sync).run()
+
+    s_async = AsyncMaTUStrategy(con.n_tasks, bb.d, code_masks=code_masks)
+    h_async = FedSimulator(cfg, con, split, bb, s_async,
+                           systems=ClientSystems.ideal(5)).run()
+
+    assert h_sync.mean_acc == h_async.mean_acc
+    assert h_sync.task_acc == h_async.task_acc
+    assert h_sync.uplink_bits_per_round == h_async.uplink_bits_per_round
+    assert h_sync.downlink_bits_per_round == h_async.downlink_bits_per_round
+    np.testing.assert_array_equal(
+        np.asarray(s_sync.server.last_task_vectors),
+        np.asarray(s_async.server.last_task_vectors))
+    ups_s = {u.client_id: u for u in s_sync._last_uploads}
+    ups_a = {u.client_id: u for u in s_async._last_uploads}
+    assert set(ups_s) == set(ups_a)
+    for c in ups_s:
+        np.testing.assert_array_equal(np.asarray(ups_s[c].unified),
+                                      np.asarray(ups_a[c].unified))
+        np.testing.assert_array_equal(np.asarray(ups_s[c].masks),
+                                      np.asarray(ups_a[c].masks))
+        np.testing.assert_array_equal(np.asarray(ups_s[c].lams),
+                                      np.asarray(ups_a[c].lams))
+    # the ideal trace reports clean counters every round
+    for row in h_async.fault_counts:
+        assert row["sampled"] == row["admitted"] > 0
+        assert row["dropped"] == row["stale"] == row["quarantined"] == 0
+
+
+# -- fault suite --------------------------------------------------------------
+
+def test_fault_suite_dropout_stragglers(monkeypatch):
+    """30% dropout + 2x-latency stragglers, staleness cap 4: every
+    round completes with a History row, admitted staleness never
+    exceeds the cap, and final mean accuracy lands within 2 points of
+    the fault-free async run."""
+    monkeypatch.setenv("REPRO_DISABLE_PALLAS", "1")
+    con, split, bb = _setting()
+    cfg = _cfg(rounds=12, eval_every=6, max_staleness=4)
+
+    s0 = AsyncMaTUStrategy(con.n_tasks, bb.d)
+    h0 = FedSimulator(cfg, con, split, bb, s0,
+                      systems=ClientSystems.ideal(5)).run()
+
+    fm = FaultModel(dropout=0.3, straggler_frac=0.5, straggler_delay=1,
+                    seed=3)
+    s1 = AsyncMaTUStrategy(con.n_tasks, bb.d)
+    h1 = FedSimulator(cfg, con, split, bb, s1,
+                      systems=ClientSystems(5, fm)).run()
+
+    assert len(h1.fault_counts) == cfg.rounds        # all rounds complete
+    tot = h1.total_fault_counts
+    assert tot["dropped"] > 0 and tot["stragglers"] > 0
+    assert tot["admitted"] > 0
+    # the trace's max delay (1) never busts the staleness cap (4)
+    assert tot["stale"] == 0
+    assert len(h1.mean_acc) == len(h0.mean_acc)
+    assert abs(h1.final_mean_acc - h0.final_mean_acc) <= 0.02
+
+
+def test_corruption_quarantined_and_counted(monkeypatch):
+    """Wire corruption under the validating decode: the exact set of
+    tampered uploads is quarantined (100% detection, no false
+    positives), counted in History, kept out of the merge, and still
+    billed on the uplink."""
+    monkeypatch.setenv("REPRO_DISABLE_PALLAS", "1")
+    con, split, bb = _setting()
+    cfg = _cfg(rounds=6, eval_every=3)
+    fm = FaultModel(corrupt_prob=0.4, seed=5)
+    systems = ClientSystems(5, fm)
+    strat = AsyncMaTUStrategy(con.n_tasks, bb.d, code_masks=True)
+    hist = FedSimulator(cfg, con, split, bb, strat, systems=systems).run()
+
+    # zero latency: every upload is dispatched the round it is admitted,
+    # so the corrupt draws are replayable straight from the trace
+    injected = [sum(1 for c in range(5) if systems.corrupt(c, r))
+                for r in range(cfg.rounds)]
+    assert sum(injected) > 0
+    for r, row in enumerate(hist.fault_counts):
+        assert row["quarantined"] == injected[r]
+    assert hist.total_fault_counts["quarantined"] == sum(injected)
+    # quarantined uploads still billed: coded streams travel framed
+    assert all(b > 0 for b in hist.uplink_bits_per_round)
+
+
+def test_corruption_requires_coded_wire(monkeypatch):
+    """Raw packed words carry no redundancy — injecting wire corruption
+    without code_masks=True is a configuration error, not silence."""
+    monkeypatch.setenv("REPRO_DISABLE_PALLAS", "1")
+    con, split, bb = _setting()
+    strat = AsyncMaTUStrategy(con.n_tasks, bb.d, code_masks=False)
+    sim = FedSimulator(_cfg(rounds=1), con, split, bb, strat,
+                       systems=ClientSystems(5, FaultModel(corrupt_prob=1.0)))
+    with pytest.raises(ValueError, match="code_masks"):
+        sim.run()
+
+
+def test_empty_round_skip_and_carry(monkeypatch):
+    """A round in which every sampled client drops out reaches the
+    History as a 0-bit skipped row instead of a pack_uploads crash,
+    and the server state carries: the next round still works and the
+    carried eval vectors are unchanged through the gap."""
+    monkeypatch.setenv("REPRO_DISABLE_PALLAS", "1")
+    con, split, bb = _setting()
+    cfg = _cfg(rounds=3, eval_every=1)
+    forced = {(c, 1) for c in range(5)}               # round 1: nobody uploads
+    strat = AsyncMaTUStrategy(con.n_tasks, bb.d)
+    sim = FedSimulator(cfg, con, split, bb, strat,
+                       systems=ClientSystems(5, forced_dropouts=forced))
+    hist = sim.run()
+    assert [row["skipped"] for row in hist.fault_counts] == [0, 1, 0]
+    assert hist.fault_counts[1]["admitted"] == 0
+    assert hist.fault_counts[1]["dropped"] == 5
+    assert len(hist.mean_acc) == 3                    # eval every round
+    assert hist.uplink_bits_per_round[1] == 0         # the 0-bit row
+    assert hist.uplink_bits_per_round[0] > 0
+    assert hist.uplink_bits_per_round[2] > 0
+    # skip-and-carry: the skipped round evaluates the carried vectors
+    assert hist.task_acc[1] == hist.task_acc[0]
+
+
+def test_sync_strategy_skip_round_carries(monkeypatch):
+    """The plain sync MaTUStrategy also supports skip-and-carry (the
+    satellite: no more pack_uploads ValueError on empty rounds)."""
+    monkeypatch.setenv("REPRO_DISABLE_PALLAS", "1")
+    con, split, bb = _setting()
+    strat = MaTUStrategy(con.n_tasks, bb.d)
+    strat.aggregate([Upload(0, [0, 1],
+                            jnp.ones((2, bb.d), jnp.float32), [4, 4])])
+    before = np.asarray(strat.server.last_task_vectors)
+    bits_before = strat.uplink_bits([])
+    assert bits_before > 0
+    strat.skip_round()
+    np.testing.assert_array_equal(
+        before, np.asarray(strat.server.last_task_vectors))
+    assert strat.uplink_bits([]) == 0
+    assert strat.downlink_bits() == 0
+
+
+# -- staleness discount -------------------------------------------------------
+
+def _toy_batch(d=64):
+    rng = np.random.default_rng(0)
+    ups = [Upload(c, [c % N_TASKS, (c + 1) % N_TASKS],
+                  jnp.asarray(rng.normal(size=(2, d)), jnp.float32),
+                  [4, 6]) for c in range(3)]
+    return RoundBatch.from_uploads(ups, N_TASKS)
+
+
+def test_staleness_discount_zero_is_exact_and_nonzero_bites(monkeypatch):
+    """All-zero staleness reproduces the plain batch path bitwise (the
+    w = 1 IEEE-exact multiply is never even traced); nonzero staleness
+    down-weights the stale client and changes the merge."""
+    monkeypatch.setenv("REPRO_DISABLE_PALLAS", "1")
+    d = 64
+    outs = {}
+    for tag, stale in (("batch", None), ("zeros", [0, 0, 0]),
+                       ("stale", [0, 3, 1])):
+        strat = AsyncMaTUStrategy(N_TASKS, d)
+        if stale is None:
+            strat.aggregate_batch(_toy_batch(d))
+        else:
+            strat.aggregate_admitted(_toy_batch(d), stale)
+        outs[tag] = np.asarray(strat.server.last_task_vectors)
+    np.testing.assert_array_equal(outs["batch"], outs["zeros"])
+    assert (outs["zeros"] != outs["stale"]).any()
+
+
+# -- dark-task carry ----------------------------------------------------------
+
+def test_dark_task_age_and_decay(monkeypatch):
+    """Tasks absent from a round age; ever-seen dark tasks decay toward
+    the unified vector of the seen stack; reappearing resets the age
+    and refreshes the carried vector bitwise from the round output."""
+    monkeypatch.setenv("REPRO_DISABLE_PALLAS", "1")
+    d = 64
+    rng = np.random.default_rng(7)
+    strat = AsyncMaTUStrategy(N_TASKS, d, dark_decay=0.25)
+
+    def batch(task_ids):
+        up = Upload(0, list(task_ids),
+                    jnp.asarray(rng.normal(size=(len(task_ids), d)),
+                                jnp.float32),
+                    [4] * len(task_ids))
+        return RoundBatch.from_uploads([up], N_TASKS)
+
+    strat.aggregate_batch(batch([0, 1]))
+    assert strat.task_age[0] == strat.task_age[1] == 0
+    assert strat.task_age[2] == 1                     # never seen: just ages
+    v1_after_r1 = np.asarray(strat._task_vecs[1])
+
+    strat.aggregate_batch(batch([0]))                 # task 1 goes dark
+    assert strat.task_age[0] == 0 and strat.task_age[1] == 1
+    v1_after_r2 = np.asarray(strat._task_vecs[1])
+    assert (v1_after_r2 != v1_after_r1).any()         # decayed, not frozen
+    # never-seen dark tasks do NOT decay (they have no carried signal)
+    np.testing.assert_array_equal(np.asarray(strat._task_vecs[3]),
+                                  np.zeros(d, np.float32))
+
+    strat.skip_round()                                # empty round still ages
+    assert strat.task_age[0] == 1 and strat.task_age[1] == 2
+
+    strat.aggregate_batch(batch([1]))                 # task 1 reappears
+    assert strat.task_age[1] == 0
+    np.testing.assert_array_equal(
+        np.asarray(strat._task_vecs[1]),
+        np.asarray(strat.server.last_task_vectors[1]))
+    # carried similarity is masked to ever-seen tasks and finite
+    sim = strat.similarity
+    assert sim.shape == (N_TASKS, N_TASKS) and np.isfinite(sim).all()
+    assert sim[3].sum() == 0.0                        # never-seen row dark
+
+
+# -- counters & phases (satellite: History coverage) --------------------------
+
+def test_sync_mode_records_fault_counters(monkeypatch):
+    """Sync runs carry the same counter schema: one row per round with
+    sampled == admitted and zeros elsewhere, for ANY strategy."""
+    monkeypatch.setenv("REPRO_DISABLE_PALLAS", "1")
+    con, split, bb = _setting()
+    cfg = _cfg(rounds=3, participation=0.6)
+    strat = STRATEGIES["fedavg"](con.n_tasks, bb.d)
+    hist = FedSimulator(cfg, con, split, bb, strat).run()
+    assert len(hist.fault_counts) == 3
+    n_sel = max(1, int(round(0.6 * 5)))
+    for row in hist.fault_counts:
+        assert row["sampled"] == row["admitted"] == n_sel
+        assert row["dropped"] == row["crashed"] == row["stale"] == 0
+        assert row["quarantined"] == row["skipped"] == 0
+    assert hist.total_fault_counts["admitted"] == 3 * n_sel
+
+
+def test_mean_phase_us_one_behind_under_pipeline(monkeypatch):
+    """Under pipeline=True the round's phases complete at its drain, so
+    phase_us[0] is empty and mean_phase_us averages only the reported
+    rounds — sync and async agree on the schema."""
+    monkeypatch.setenv("REPRO_DISABLE_PALLAS", "1")
+    con, split, bb = _setting()
+    cfg = _cfg(rounds=3, pipeline=True)
+    for systems in (None, ClientSystems.ideal(5)):
+        strat = (MaTUStrategy if systems is None
+                 else AsyncMaTUStrategy)(con.n_tasks, bb.d)
+        hist = FedSimulator(cfg, con, split, bb, strat,
+                            systems=systems).run()
+        assert hist.phase_us[0] == {}                 # one behind
+        assert all("pack" in ph and "device" in ph
+                   for ph in hist.phase_us[1:])
+        mean = hist.mean_phase_us
+        assert set(mean) >= {"pack", "device"}
+        assert all(v > 0 for v in mean.values())

@@ -206,6 +206,60 @@ def test_batched_decode_rejects_corrupt_streams():
         decode_mask_rows(bad, d, 3)
 
 
+def test_coded_stream_error_typed():
+    """Decode-side validation raises the typed CodedStreamError (the
+    ValueError subclass the async server quarantines on) for the three
+    adversarial classes: truncated header, run count pointing past the
+    stream, and trailing garbage."""
+    from repro.fed.compression import CodedStreamError
+    assert issubclass(CodedStreamError, ValueError)
+    rng = np.random.default_rng(5)
+    d = 700
+    words = bitpack.pack_bits_np(np.stack([_mask(rng, d, 0.8)
+                                           for _ in range(2)]))
+    stream = encode_mask_rows(words, d)
+    with pytest.raises(CodedStreamError):
+        decode_mask_rows(stream[:HEADER_BYTES - 2], d, 2)  # truncated header
+    bad = stream.copy()
+    bad[1:5] = np.array([255, 255, 255, 127], np.uint8)
+    with pytest.raises(CodedStreamError):
+        decode_mask_rows(bad, d, 2)                 # run count past stream
+    garbage = np.concatenate([stream, np.array([7, 7, 7], np.uint8)])
+    with pytest.raises(CodedStreamError):
+        decode_mask_rows(garbage, d, 2)             # trailing garbage
+
+
+def test_decode_fuzz_truncate_and_flip_round_trips_or_typed():
+    """Round-trip fuzz: randomly truncating or bit-flipping a valid
+    coded stream, decode either raises CodedStreamError or returns a
+    (possibly different) valid mask — bit flips can alias, which is
+    exactly why the async wire adds a CRC frame (repro.fed.systems) —
+    but it must NEVER die with an untyped exception.  Unmodified
+    streams keep round-tripping bit-exactly."""
+    from repro.fed.compression import CodedStreamError
+    rng = np.random.default_rng(99)
+    d = 513
+    typed = 0
+    for _ in range(60):
+        k = int(rng.integers(1, 4))
+        words = bitpack.pack_bits_np(
+            np.stack([_mask(rng, d, float(rng.choice([0.05, 0.5, 0.9])))
+                      for _ in range(k)]))
+        stream = encode_mask_rows(words, d)
+        np.testing.assert_array_equal(decode_mask_rows(stream, d, k), words)
+        bad = stream.copy()
+        if rng.random() < 0.5 and stream.size > 1:
+            bad = bad[:int(rng.integers(0, stream.size))]
+        else:
+            pos = int(rng.integers(stream.size * 8))
+            bad[pos // 8] ^= np.uint8(1 << (pos % 8))
+        try:
+            decode_mask_rows(bad, d, k)
+        except CodedStreamError:
+            typed += 1
+    assert typed > 0        # the typed rejection path was exercised
+
+
 try:
     import hypothesis
     import hypothesis.strategies as st

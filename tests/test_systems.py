@@ -1,0 +1,222 @@
+"""Event-clock client-system layer (repro.fed.systems).
+
+Determinism contract (replayable, failure-invariant draws), the crash
+availability window, CRC wire framing, 100% tamper detection through
+the validating decode, admission-queue drain order, and the
+simulator-level fold_in RNG regression: survivors' uploads are
+bit-identical with and without a targeted fault injection.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.fed.compression import CodedStreamError, decode_mask_rows, \
+    encode_mask_rows
+from repro.fed.systems import (AdmissionQueue, ClientSystems, FaultModel,
+                               WireFrameError, blank_fault_counters,
+                               unwrap_stream, wrap_stream)
+from repro.kernels import bitpack
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# -- stateless draws ----------------------------------------------------------
+
+def test_draws_replayable_and_instance_independent():
+    """Every (client, round) draw is a pure function of (seed, channel,
+    client, round): repeated calls and fresh instances agree."""
+    fm = FaultModel(dropout=0.4, straggler_frac=0.4, crash_prob=0.2,
+                    corrupt_prob=0.4, seed=11)
+    a = ClientSystems(8, fm)
+    b = ClientSystems(8, fm)
+    for c in range(8):
+        for r in range(6):
+            for fn in ("available", "dropout", "is_straggler", "delay",
+                       "corrupt"):
+                assert getattr(a, fn)(c, r) == getattr(a, fn)(c, r)
+                assert getattr(a, fn)(c, r) == getattr(b, fn)(c, r)
+
+
+def test_draws_failure_invariant_across_clients():
+    """Forcing faults for one client perturbs no other client's draws
+    (each (channel, client, round) cell owns its own generator)."""
+    fm = FaultModel(dropout=0.3, straggler_frac=0.3, corrupt_prob=0.3,
+                    seed=4)
+    plain = ClientSystems(6, fm)
+    forced = ClientSystems(6, fm,
+                           forced_dropouts={(0, r) for r in range(10)})
+    for c in range(1, 6):
+        for r in range(10):
+            assert plain.dropout(c, r) == forced.dropout(c, r)
+            assert plain.delay(c, r) == forced.delay(c, r)
+            assert plain.corrupt(c, r) == forced.corrupt(c, r)
+    assert all(forced.dropout(0, r) for r in range(10))
+
+
+def test_crash_covers_rejoin_window():
+    """A crash at round q makes the client unavailable for rounds
+    q .. q + crash_rounds − 1 and available again after."""
+    sys_always = ClientSystems(2, FaultModel(crash_prob=1.0, crash_rounds=3))
+    assert not sys_always.available(0, 0)
+    sys_never = ClientSystems(2, FaultModel(crash_prob=0.0))
+    assert all(sys_never.available(0, r) for r in range(5))
+
+    fm = FaultModel(crash_prob=0.25, crash_rounds=3, seed=9)
+    s = ClientSystems(4, fm)
+    crashes = [(c, r) for c in range(4) for r in range(12)
+               if s._crashed_at(c, r)]
+    assert crashes, "seed should produce at least one crash"
+    for c, q in crashes:
+        for r in range(q, q + fm.crash_rounds):
+            assert not s.available(c, r)
+    # rejoin: some crash is followed by availability after the window
+    assert any(s.available(c, q + fm.crash_rounds) for c, q in crashes
+               if not any(s._crashed_at(c, x)
+                          for x in range(q + 1, q + 2 * fm.crash_rounds)))
+
+
+def test_ideal_trace_is_faultless():
+    s = ClientSystems.ideal(5)
+    for c in range(5):
+        for r in range(8):
+            assert s.available(c, r)
+            assert not s.dropout(c, r)
+            assert s.delay(c, r) == 0
+            assert not s.corrupt(c, r)
+    assert not s.injects_corruption
+
+
+def test_base_delay_heterogeneity():
+    s = ClientSystems(3, FaultModel(straggler_frac=1.0, straggler_delay=2),
+                      base_delay=[0, 1, 3])
+    assert [s.delay(c, 0) for c in range(3)] == [2, 3, 5]
+    with pytest.raises(ValueError):
+        ClientSystems(3, base_delay=[0, 1])
+
+
+# -- wire framing -------------------------------------------------------------
+
+def test_frame_roundtrip_and_rejections():
+    payload = np.arange(40, dtype=np.uint8)
+    framed = wrap_stream(payload)
+    np.testing.assert_array_equal(unwrap_stream(framed), payload)
+    with pytest.raises(WireFrameError):
+        unwrap_stream(framed[:4])                       # short header
+    bad = framed.copy(); bad[0] ^= 0xFF
+    with pytest.raises(WireFrameError):
+        unwrap_stream(bad)                              # bad magic
+    with pytest.raises(WireFrameError):
+        unwrap_stream(framed[:-1])                      # truncated payload
+    with pytest.raises(WireFrameError):
+        unwrap_stream(np.concatenate([framed, framed[-1:]]))  # trailing
+    flip = framed.copy(); flip[-1] ^= 0x01
+    with pytest.raises(WireFrameError):
+        unwrap_stream(flip)                             # CRC mismatch
+
+
+def test_tamper_detected_100_percent():
+    """Every injected tamper (truncation or distinct-bit flips) of a
+    framed coded stream is caught by the validating decode — the basis
+    of the 100%-quarantine acceptance criterion.  The entropy coder
+    alone cannot promise this (near-bijective), the CRC frame can."""
+    rng = np.random.default_rng(1)
+    d = 769
+    s = ClientSystems(1, FaultModel(corrupt_prob=1.0, truncate_frac=0.5,
+                                    seed=2))
+    caught = 0
+    trials = 120
+    for trial in range(trials):
+        k = int(rng.integers(1, 4))
+        words = bitpack.pack_bits_np(
+            np.stack([rng.random(d) < float(rng.choice([0.1, 0.5, 0.85]))
+                      for _ in range(k)]))
+        framed = wrap_stream(encode_mask_rows(words, d))
+        tampered = s.tamper(framed, 0, trial)
+        assert tampered.size != framed.size or \
+            (tampered != framed).any(), "tamper must change the stream"
+        try:
+            decode_mask_rows(unwrap_stream(tampered), d, k)
+        except (WireFrameError, CodedStreamError):
+            caught += 1
+    assert caught == trials
+
+
+def test_tamper_is_deterministic():
+    s = ClientSystems(2, FaultModel(corrupt_prob=1.0, seed=3))
+    stream = np.arange(64, dtype=np.uint8)
+    np.testing.assert_array_equal(s.tamper(stream, 1, 5),
+                                  s.tamper(stream, 1, 5))
+    a, b = s.tamper(stream, 0, 5), s.tamper(stream, 1, 5)
+    assert a.size != b.size or (a != b).any()
+
+
+# -- admission queue ----------------------------------------------------------
+
+def test_queue_drain_order_and_buffering():
+    q = AdmissionQueue()
+    q.push(2, 0, "late")          # arrives at tick 2, dispatched tick 0
+    q.push(0, 0, "a")
+    q.push(0, 0, "b")             # same tick: push order preserved
+    q.push(1, 1, "c")
+    assert [i.payload for i in q.pop_ready(0)] == ["a", "b"]
+    assert len(q) == 2
+    assert [i.payload for i in q.pop_ready(1)] == ["c"]
+    got = q.pop_ready(5)
+    assert [i.payload for i in got] == ["late"]
+    assert got[0].dispatch == 0 and got[0].arrival == 2
+    assert len(q) == 0 and q.pop_ready(9) == []
+
+
+def test_blank_fault_counters_keys():
+    c = blank_fault_counters()
+    assert set(c) == {"sampled", "dropped", "crashed", "stragglers",
+                      "stale", "quarantined", "buffered", "admitted",
+                      "skipped"}
+    assert all(v == 0 for v in c.values())
+
+
+# -- simulator RNG regression -------------------------------------------------
+
+def _setting():
+    from repro.data.dirichlet import dirichlet_split
+    from repro.data.synthetic import make_constellation
+    from repro.fed.testbed import MLPBackbone
+    con = make_constellation(n_tasks=5, n_groups=2, feat_dim=16,
+                             n_classes=4, seed=0)
+    split = dirichlet_split(n_clients=5, n_tasks=5, n_classes=4,
+                            zeta_t=0.5, tasks_per_client=2, seed=0)
+    bb = MLPBackbone(16, hidden=24, lora_rank=4)
+    return con, split, bb
+
+
+def test_simulator_rng_failure_invariant(monkeypatch):
+    """fold_in key schedule regression: dropping ONE client at the
+    final round leaves every survivor's upload of that round
+    bit-identical to the fault-free run (selection, training keys, and
+    all pre-fault state are untouched by the injected fault)."""
+    monkeypatch.setenv("REPRO_DISABLE_PALLAS", "1")
+    from repro.fed.simulator import FedConfig, FedSimulator
+    from repro.fed.strategies import AsyncMaTUStrategy
+    con, split, bb = _setting()
+    cfg = FedConfig(rounds=3, participation=1.0, local_steps=2,
+                    batch_size=16, local_data=64, eval_every=3)
+    runs = {}
+    for fault in (False, True):
+        strat = AsyncMaTUStrategy(con.n_tasks, bb.d)
+        forced = {(0, cfg.rounds - 1)} if fault else None
+        sim = FedSimulator(cfg, con, split, bb, strat,
+                           systems=ClientSystems(5, forced_dropouts=forced))
+        sim.run()
+        runs[fault] = {u.client_id: u for u in strat._last_uploads}
+    assert 0 in runs[False] and 0 not in runs[True]
+    survivors = set(runs[True])
+    assert survivors == set(runs[False]) - {0}
+    for c in survivors:
+        a, b = runs[False][c], runs[True][c]
+        np.testing.assert_array_equal(np.asarray(a.unified),
+                                      np.asarray(b.unified))
+        np.testing.assert_array_equal(np.asarray(a.masks),
+                                      np.asarray(b.masks))
+        np.testing.assert_array_equal(np.asarray(a.lams),
+                                      np.asarray(b.lams))

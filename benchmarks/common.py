@@ -25,9 +25,31 @@ def timed(fn, *args, **kw):
 
 
 def save_detail(name: str, detail: Dict) -> None:
+    """Persist a bench's detail dict, merging into any existing
+    ``results/bench/<name>.json`` instead of clobbering it — a re-run
+    of one leg (say the sharded A/B under ``--devices``) must not drop
+    the rows another leg wrote earlier (the
+    ``engine_sharded``/``speedup_sharded_vs_single`` regression).  The
+    merge is one level deep: legs share top-level grid keys (e.g.
+    ``N32_T30_d1048576``) but each writes its own sub-keys, so dict
+    values merge per sub-key (new leg wins on conflicts) while scalar
+    values replace."""
     os.makedirs(RESULTS_DIR, exist_ok=True)
-    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
-        json.dump(detail, f, indent=2, default=lambda o: float(o)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    merged: Dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            merged = {}    # unreadable stale file: start fresh
+    for k, v in detail.items():
+        if isinstance(v, dict) and isinstance(merged.get(k), dict):
+            merged[k].update(v)
+        else:
+            merged[k] = v
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=2, default=lambda o: float(o)
                   if isinstance(o, (np.floating,)) else str(o))
 
 

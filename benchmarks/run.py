@@ -43,6 +43,7 @@ BENCHES = [
     "bench_conflicts",   # Fig. 6: conflict groups + cross-task ablation
     "bench_kernels",     # Pallas kernel microbench
     "bench_round_engine",  # batched RoundEngine vs legacy server loop
+    "bench_population",  # chunked engine over a 10^6-client population
     "bench_roofline",    # Roofline from the dry-run artifacts
 ]
 

@@ -177,6 +177,60 @@ host devices on the CI debug mesh):
   On the Pallas paths masks/m̂/similarity stay bit-identical and λ
   agrees to fp32 accumulation tolerance (the PR 2 tile caveat).
 
+Population-scale contract
+-------------------------
+``RoundEngine.round_chunked`` streams a round of N uploads through a
+fixed-shape chunk buffer of C clients, so a round's memory is
+**O(chunk + T·d), independent of N** — the client-axis twin of the
+d-sharding above.  The Eq. 3/4 agreement numerators (integer sign
+votes), Eq. 5 popcount dot partials, per-task size totals, and the λ
+num/den block partials are all associative folds, split into four
+phases (``repro.kernels.ref``, chunked section):
+
+* **phase A** (scalars): per-task size totals + membership counts fold
+  into (T+1,) accumulators — the Eq. 4 γ normaliser needs the *global*
+  totals before any merge work, which is why the engine makes two
+  passes over the upload stream (``uploads`` may be a zero-arg
+  callable returning a fresh iterator — the population simulator
+  re-derives sampled clients on demand and never materialises the
+  round).
+* **phase B** (merge): each chunk packs into the SAME slot layout as
+  the monolithic round (one ``SlotStage``, blocked before refill) and
+  folds sign votes + γλ-weighted merge partials into carried
+  (T+1, dp) accumulators via one jitted chunk step reused across
+  chunks (the last chunk is padded — same static signature, padding
+  rows carry the sentinel task id so their contributions land in the
+  swallowed (T+1)-th segment).
+* **finish**: Eq. 3 α/m̂, Eq. 5 dots, Eq. 6 weights, Eq. 7 combine and
+  the λ numerator from the accumulators alone — no slot tensor in
+  sight.
+* **phase C** (downlink): per chunk, re-unification from the finished
+  task vectors; each slot row lives in exactly one chunk, so this is
+  embarrassingly parallel over rows.  ``sink`` streams each chunk's
+  ``ClientDownlink``s out instead of holding N of them.
+
+**Chunk-count invariance** (the bit-identity rule, extending PR 3's
+shard-count-invariant λ tree): every fp32 client-axis reduction is ONE
+global sequential scatter fold — the carried ``acc.at[ids].add``
+applies the same adds in the same global row order as the monolithic
+round's whole-round segment-sum, for ANY contiguous chunking; the
+integer votes/dots are order-free; and every d-axis reduction keeps
+the monolithic grid (``CHUNK_D`` streaming blocks, ``LAMBDA_BLOCK`` λ
+tree).  Hence chunked ≡ monolithic **bit for bit** in ref mode for
+both layouts — masks, λ, vectors, and the measured wire bits
+(tests/test_chunked_engine.py), for chunk sizes 1, non-divisors of N,
+and > N alike.
+
+**2-D (slots × taskvec) mesh**: on a ``make_population_mesh`` the
+"slots" axis shards the chunk's client/slot rows in phase C (and the
+ingest buffers ride along) while the taskvec axes keep sharding d;
+phase B never splits the client fold across devices (that would change
+the fp32 accumulation order) — each shard folds every row of its
+d-slice locally, so the merge step has NO collectives and the whole
+round keeps the monolithic collective budget: one integer dots psum +
+one λ-num roots psum in the finish, plus one λ-den roots psum per
+chunk in phase C.
+
 Async & fault model
 -------------------
 The engine itself is stateless per round and keyed by ``(n_max, k_max,
@@ -218,9 +272,11 @@ the jit caches reuse across ticks regardless of which clients made it.
 from __future__ import annotations
 
 import functools
+import itertools
 import time
 from dataclasses import dataclass
-from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+from typing import (Callable, Dict, Iterable, List, NamedTuple, Optional,
+                    Sequence, Tuple, Union)
 
 import jax
 import jax.numpy as jnp
@@ -231,8 +287,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.aggregation import EPS_DEFAULT, KAPPA_DEFAULT, RHO_DEFAULT
 from repro.core.client import ClientDownlink, ClientUpload
 from repro.kernels import bitpack, ops
-from repro.kernels.ref import LAMBDA_BLOCK, _next_pow2
-from repro.nn.sharding import taskvec_axes, taskvec_sharding
+from repro.kernels.ref import CHUNK_D, LAMBDA_BLOCK, _chunked, _next_pow2
+from repro.nn.sharding import slot_axes, taskvec_axes, taskvec_sharding
 
 # default async staleness discount δ: a buffered upload folded s rounds
 # after dispatch enters Eq. 3 with weight δ**s (see "Async & fault
@@ -651,6 +707,181 @@ def _round_impl(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
                      out_specs=out_specs, check_rep=False)(*operands)
 
 
+def _assemble_downlinks(client_ids: List[int], task_ids: List[List[int]],
+                        d: int, down_unified, down_masks, down_lams, *,
+                        code_masks: bool = False,
+                        phase_us: Optional[Dict[str, float]] = None
+                        ) -> Dict[int, ClientDownlink]:
+    """Slice batched downlink tensors back to ragged per-client
+    ClientDownlinks — the shared back half of ``RoundEngine.downlinks``
+    and each ``round_chunked`` phase-C chunk.  With ``code_masks`` the
+    mask rows of ALL the given clients are entropy-coded in one batched
+    call and split back by per-row record sizes (records self-delimit,
+    so each slice is byte-identical to encoding that client alone)."""
+    streams: Optional[List[jax.Array]] = None
+    if code_masks:
+        from repro.fed.compression import encode_mask_rows_with_sizes
+        t0 = time.perf_counter()
+        dm = np.asarray(down_masks)
+        if dm.dtype != np.uint32:     # bool A/B layout
+            dm = bitpack.pack_bits_np(dm)
+        ks = [len(t) for t in task_ids]
+        rows = dm[np.repeat(np.arange(len(ks)), ks),
+                  np.concatenate([np.arange(k, dtype=np.int64)
+                                  for k in ks])]
+        stream, sizes = encode_mask_rows_with_sizes(rows, d)
+        ends = np.cumsum(sizes)
+        streams, b0, r0 = [], 0, 0
+        for k in ks:
+            b1 = int(ends[r0 + k - 1]) if k else b0
+            streams.append(jnp.asarray(stream[b0:b1]))
+            b0, r0 = b1, r0 + k
+        if phase_us is not None:
+            phase_us["encode"] = (phase_us.get("encode", 0.0)
+                                  + (time.perf_counter() - t0) * 1e6)
+    result: Dict[int, ClientDownlink] = {}
+    for i, cid in enumerate(client_ids):
+        k = len(task_ids[i])
+        rows_i = streams[i] if code_masks else down_masks[i, :k]
+        result[cid] = ClientDownlink(down_unified[i], rows_i,
+                                     down_lams[i, :k])
+    return result
+
+
+# -- chunked-round jit bodies (population-scale contract) --------------------
+# Module-level (not closures) so tests can monkeypatch them, mirroring
+# ``_round_impl``; each is traced once per (shapes, mode, d, mesh).
+
+def _chunk_scalars_impl(slot_sizes, slot_valid, slot_tasks, totals, nt_acc,
+                        slot_weights=None, *, mode: str):
+    """Phase-A chunk step (replicated scalars — no shard_map needed)."""
+    return ops.matu_chunk_scalars(slot_sizes, slot_valid, slot_tasks,
+                                  totals, nt_acc,
+                                  slot_weights=slot_weights, mode=mode)
+
+
+def _merge_chunk_impl(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
+                      slot_tasks, totals, a_acc, tau_acc, slot_weights=None,
+                      *, mode: str, d: int, mesh: Optional[Mesh] = None,
+                      axes: Tuple[str, ...] = (),
+                      axis_sizes: Tuple[int, ...] = ()):
+    """Phase-B chunk step.  Under a mesh each taskvec shard folds EVERY
+    chunk row of its local d-slice — the client fold is never split
+    across devices (that would change the fp32 accumulation order), so
+    the step has no collectives."""
+    packed = slot_masks.dtype == jnp.uint32
+    n_shards = int(np.prod(axis_sizes)) if axes else 1
+    if mesh is None or n_shards == 1:
+        if packed:
+            return ops.matu_merge_chunk_packed(
+                unified, slot_masks, slot_lams, slot_sizes, slot_valid,
+                slot_tasks, totals, a_acc, tau_acc, d,
+                slot_weights=slot_weights, mode=mode)
+        return ops.matu_merge_chunk(
+            unified, slot_masks, slot_lams, slot_sizes, slot_valid,
+            slot_tasks, totals, a_acc, tau_acc,
+            slot_weights=slot_weights, mode=mode)
+
+    d_local = int(unified.shape[-1]) // n_shards
+    ax = axes[0] if len(axes) == 1 else axes
+    s2, s3, rep = P(None, ax), P(None, None, ax), P()
+
+    def body(u, m, lam, sz, val, tid, tot, a, ta, *w):
+        w0 = w[0] if w else None
+        if packed:
+            return ops.matu_merge_chunk_packed(u, m, lam, sz, val, tid,
+                                               tot, a, ta, d_local,
+                                               slot_weights=w0, mode=mode)
+        return ops.matu_merge_chunk(u, m, lam, sz, val, tid, tot, a, ta,
+                                    slot_weights=w0, mode=mode)
+
+    in_specs = (s2, s3, rep, rep, rep, rep, rep, s2, s2)
+    operands = (unified, slot_masks, slot_lams, slot_sizes, slot_valid,
+                slot_tasks, totals, a_acc, tau_acc)
+    if slot_weights is not None:
+        in_specs += (rep,)
+        operands += (slot_weights,)
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=(s2, s2), check_rep=False)(*operands)
+
+
+def _finish_impl(a_acc, tau_acc, nt_acc, *, cfg: EngineConfig, mode: str,
+                 d: int, packed: bool, n_for_dtype: int,
+                 mesh: Optional[Mesh] = None, axes: Tuple[str, ...] = (),
+                 axis_sizes: Tuple[int, ...] = ()):
+    """Chunked-round finish: Eq. 3 α/m̂ → Eq. 5 dots → Eq. 6/7 → λ
+    numerator, from the accumulators alone.  The only collectives of
+    the whole merge+finish pipeline live here (integer dots psum + λ
+    roots psum), exactly the monolithic round's budget."""
+    kw = dict(n_tasks=cfg.n_tasks, rho=cfg.rho, eps=cfg.eps,
+              kappa=cfg.kappa, cross_task=cfg.cross_task,
+              uniform_cross=cfg.uniform_cross, mode=mode)
+    n_shards = int(np.prod(axis_sizes)) if axes else 1
+    if mesh is None or n_shards == 1:
+        if packed:
+            return ops.matu_finish_packed(a_acc, tau_acc, nt_acc,
+                                          n_for_dtype, d=d, **kw)
+        return ops.matu_finish(a_acc, tau_acc, nt_acc, d=d, **kw)
+
+    d_local = int(a_acc.shape[-1]) // n_shards
+    ax = axes[0] if len(axes) == 1 else axes
+    s2, rep = P(None, ax), P()
+    kw.update(axis_name=axes, axis_sizes=axis_sizes, d_norm=d)
+
+    def body(a, ta, nt):
+        if packed:
+            return ops.matu_finish_packed(a, ta, nt, n_for_dtype,
+                                          d=d_local, **kw)
+        return ops.matu_finish(a, ta, nt, d=d_local, **kw)
+
+    # (tv, τ̂, α_num | m̂, n_t, sim, num_t)
+    return shard_map(body, mesh=mesh, in_specs=(s2, s2, rep),
+                     out_specs=(s2, s2, s2, rep, rep, rep),
+                     check_rep=False)(a_acc, tau_acc, nt_acc)
+
+
+def _downlink_chunk_impl(task_vectors, slot_valid, slot_tasks, num_t, *,
+                         cfg: EngineConfig, mode: str, d: int, packed: bool,
+                         mesh: Optional[Mesh] = None,
+                         axes: Tuple[str, ...] = (),
+                         axis_sizes: Tuple[int, ...] = (),
+                         row_axes: Tuple[str, ...] = ()):
+    """Phase-C chunk step: downlink re-unification of one client chunk.
+    This is where the 2-D (slots × taskvec) mesh composes: ``row_axes``
+    (the fed_slots rule) shard the chunk's client rows, the taskvec
+    axes shard d, and the λ-denominator roots psum over the taskvec
+    axes only (rows never mix)."""
+    n_shards = int(np.prod(axis_sizes)) if axes else 1
+    if mesh is None or (n_shards == 1 and not row_axes):
+        if packed:
+            return ops.matu_downlink_chunk_packed(task_vectors, slot_tasks,
+                                                  num_t, d, mode=mode)
+        return ops.matu_downlink_chunk(task_vectors, slot_valid, slot_tasks,
+                                       num_t, n_tasks=cfg.n_tasks, mode=mode)
+
+    d_local = (int(task_vectors.shape[-1]) // n_shards
+               if n_shards > 1 else d)
+    ax = (axes[0] if len(axes) == 1 else axes) if n_shards > 1 else None
+    rx = (row_axes[0] if len(row_axes) == 1 else row_axes) \
+        if row_axes else None
+    rep = P()
+    kw: Dict[str, object] = dict(mode=mode)
+    if n_shards > 1:
+        kw.update(axis_name=axes, axis_sizes=axis_sizes)
+
+    def body(tv, val, tid, nt):
+        if packed:
+            return ops.matu_downlink_chunk_packed(tv, tid, nt, d_local, **kw)
+        return ops.matu_downlink_chunk(tv, val, tid, nt,
+                                       n_tasks=cfg.n_tasks, **kw)
+
+    in_specs = (P(None, ax), P(rx, None), P(rx, None), rep)
+    out_specs = (P(rx, ax), P(rx, None, ax), P(rx, None))
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)(
+                         task_vectors, slot_valid, slot_tasks, num_t)
+
+
 class RoundEngine:
     """Stateless per-round executor; owns only jit caches (one per
     (dispatch mode, d) — shapes are handled by jax.jit's own cache)
@@ -667,6 +898,10 @@ class RoundEngine:
         the traced program embeds the shard_map layout."""
         self.mesh = mesh
         self._axes, self._axis_sizes, self.n_shards = _mesh_layout(mesh)
+        self._slot_axes = slot_axes(mesh) if mesh is not None else ()
+        self.slot_shards = (int(np.prod([mesh.shape[a]
+                                         for a in self._slot_axes]))
+                            if self._slot_axes else 1)
         self._impls.clear()
 
     def _impl(self, mode: str, d: int):
@@ -724,35 +959,11 @@ class RoundEngine:
         on use (``ClientDownlink.mask_row``) and downlink bits are
         measured off the actual stream.  ``phase_us`` accumulates the
         ``encode`` host microseconds."""
-        streams: Optional[List[jax.Array]] = None
-        if code_masks:
-            from repro.fed.compression import encode_mask_rows_with_sizes
-            t0 = time.perf_counter()
-            down_masks = np.asarray(out.down_masks)
-            if down_masks.dtype != np.uint32:     # bool A/B layout
-                down_masks = bitpack.pack_bits_np(down_masks)
-            ks = [len(t) for t in packed.task_ids]
-            rows = down_masks[np.repeat(np.arange(len(ks)), ks),
-                              np.concatenate([np.arange(k, dtype=np.int64)
-                                              for k in ks])]
-            stream, sizes = encode_mask_rows_with_sizes(rows, packed.d)
-            ends = np.cumsum(sizes)
-            streams, b0, r0 = [], 0, 0
-            for k in ks:
-                b1 = int(ends[r0 + k - 1]) if k else b0
-                streams.append(jnp.asarray(stream[b0:b1]))
-                b0, r0 = b1, r0 + k
-            if phase_us is not None:
-                phase_us["encode"] = (phase_us.get("encode", 0.0)
-                                      + (time.perf_counter() - t0) * 1e6)
-        result: Dict[int, ClientDownlink] = {}
-        for i, cid in enumerate(packed.client_ids):
-            k = len(packed.task_ids[i])
-            rows_i = (streams[i] if code_masks
-                      else out.down_masks[i, :k])
-            result[cid] = ClientDownlink(out.down_unified[i], rows_i,
-                                         out.down_lams[i, :k])
-        return result
+        return _assemble_downlinks(packed.client_ids, packed.task_ids,
+                                   packed.d, out.down_unified,
+                                   out.down_masks, out.down_lams,
+                                   code_masks=code_masks,
+                                   phase_us=phase_us)
 
     def round(self, uploads: Sequence[ClientUpload], *,
               mode: Optional[str] = None, packed: bool = True,
@@ -784,6 +995,236 @@ class RoundEngine:
                 batch.slot_weights = jnp.asarray(w)
         out = self.run_packed(batch, mode=mode)
         return self.downlinks(batch, out, code_masks=code_masks), out
+
+    def _chunk_impls(self, mode: str, d: int, packed: bool,
+                     n_for_dtype: int):
+        """Jitted (scalars, merge, finish, downlink) chunk steps, cached
+        like ``_impl`` — one static signature reused across every chunk
+        of every round with this (mode, layout, d).  The big carried
+        accumulators are donated so the fold updates in place."""
+        key = ("chunked", mode, d, packed, n_for_dtype)
+        fns = self._impls.get(key)
+        if fns is None:
+            import repro.core.engine as _mod
+            common = dict(mesh=self.mesh, axes=self._axes,
+                          axis_sizes=self._axis_sizes)
+            scal = jax.jit(
+                functools.partial(_mod._chunk_scalars_impl, mode=mode),
+                donate_argnums=(3, 4))
+            merge = jax.jit(
+                functools.partial(_mod._merge_chunk_impl, mode=mode, d=d,
+                                  **common),
+                donate_argnums=(7, 8))
+            # finish is NOT donated: its (T, dp) outputs have different
+            # shapes/dtypes from the accumulators, so donation would
+            # only raise "unusable donated buffer" noise
+            finish = jax.jit(
+                functools.partial(_mod._finish_impl, cfg=self.cfg,
+                                  mode=mode, d=d, packed=packed,
+                                  n_for_dtype=n_for_dtype, **common))
+            down = jax.jit(
+                functools.partial(_mod._downlink_chunk_impl, cfg=self.cfg,
+                                  mode=mode, d=d, packed=packed,
+                                  row_axes=self._slot_axes, **common))
+            fns = (scal, merge, finish, down)
+            self._impls[key] = fns
+        return fns
+
+    def round_chunked(self, uploads, *, chunk_clients: int,
+                      mode: Optional[str] = None, packed: bool = True,
+                      code_masks: bool = False,
+                      staleness: Optional[Sequence[int]] = None,
+                      staleness_discount: float = STALENESS_DISCOUNT,
+                      k_max: Optional[int] = None,
+                      sink: Optional[Callable[
+                          [Dict[int, ClientDownlink]], None]] = None,
+                      phase_us: Optional[Dict[str, float]] = None
+                      ) -> Tuple[Dict[int, ClientDownlink], EngineOutput,
+                                 Dict[str, int]]:
+        """Run one round by streaming uploads through a fixed-shape
+        chunk buffer of ``chunk_clients`` clients — memory is
+        O(chunk + T·d), independent of N, and the result is
+        BIT-identical to ``round`` in ref mode (see "Population-scale
+        contract" in the module docstring).
+
+        ``uploads`` is a sequence of ClientUploads or a zero-arg
+        callable returning a fresh iterator over them — the engine
+        makes two passes (the Eq. 4 γ normaliser needs global size
+        totals before any merge work), and a callable lets the
+        population simulator re-derive sampled clients on demand
+        instead of materialising the round.
+
+        ``sink`` (optional) receives each phase-C chunk's
+        ``{client_id: ClientDownlink}`` dict as it is produced; with a
+        sink the returned downlink dict is empty, so no per-client
+        state accumulates.  The returned ``EngineOutput`` carries the
+        global results (task_vectors / tau_hats / similarity / m̂) with
+        the downlink fields None — per-client downlinks only exist
+        chunk-at-a-time.  The stats dict reports the measured
+        ``uplink_bits`` / ``downlink_bits`` (identical to the
+        monolithic round's accounting), ``n_clients`` and ``n_chunks``.
+        """
+        mode = mode or ops.resolve_mode()
+        C = int(chunk_clients)
+        if C < 1:
+            raise ValueError(f"round_chunked: chunk_clients={C} < 1")
+        make_iter = (uploads if callable(uploads)
+                     else (lambda: iter(uploads)))
+
+        # -- pass 0: chunk metadata (client ids / task ids / sizes only —
+        # O(N·k) host scalars, no d-axis tensor touched)
+        metas: List[tuple] = []
+        cur_ids: List[int] = []
+        cur_tasks: List[List[int]] = []
+        cur_sizes: List[np.ndarray] = []
+        cur_stal: List[float] = []
+        stal_it = iter(staleness) if staleness is not None else None
+        d = None
+        k_seen, n_clients = 1, 0
+
+        def _flush():
+            metas.append((list(cur_ids), list(cur_tasks), list(cur_sizes),
+                          list(cur_stal) if stal_it is not None else None))
+            cur_ids.clear(), cur_tasks.clear()
+            cur_sizes.clear(), cur_stal.clear()
+
+        for up in make_iter():
+            if d is None:
+                d = int(up.unified.shape[0])
+            tids = list(up.task_ids)
+            k_seen = max(k_seen, len(tids))
+            cur_ids.append(up.client_id)
+            cur_tasks.append(tids)
+            cur_sizes.append(np.asarray(up.data_sizes, np.float32))
+            if stal_it is not None:
+                cur_stal.append(next(stal_it))
+            n_clients += 1
+            if len(cur_ids) == C:
+                _flush()
+        if cur_ids:
+            _flush()
+        if n_clients == 0:
+            raise ValueError("round_chunked: empty round (no uploads) — "
+                             "sample at least one client or skip the round")
+        if k_max is None:
+            k_max = _round_up_pow2(k_seen)
+        elif k_max < k_seen:
+            raise ValueError(f"round_chunked: k_max={k_max} < max client "
+                             f"task count {k_seen}")
+        # pow2 chunk rows, ≥ the slot-shard count so phase-C row
+        # sharding always divides evenly
+        c_pad = max(_round_up_pow2(C), self.slot_shards)
+        n_seg = self.cfg.n_tasks + 1
+        d_pad = pad_d_for_shards(d, self.n_shards)
+        # accumulator width: the sharded padding, or the monolithic
+        # round's own CHUNK_D streaming-grid padding — identical grids
+        # are what make chunked ≡ monolithic bitwise
+        dp = d_pad if self.n_shards > 1 else _chunked(d, CHUNK_D)[1]
+        # same α-numerator dtype decision as the monolithic round
+        # (keyed on its default n_max = next pow2 ≥ N)
+        n_for_dtype = _round_up_pow2(n_clients)
+        scal, merge, finish, down = self._chunk_impls(
+            mode, d, packed, n_for_dtype if packed else 0)
+
+        def _scalar_chunk(ids_, tasks_, sizes_, stal_):
+            sz = np.zeros((c_pad, k_max), np.float32)
+            tk = np.full((c_pad, k_max), self.cfg.n_tasks, np.int32)
+            vd = np.zeros((c_pad, k_max), bool)
+            for i, (tl, sl) in enumerate(zip(tasks_, sizes_)):
+                k = len(tl)
+                sz[i, :k] = sl
+                tk[i, :k] = tl
+                vd[i, :k] = True
+            w = None
+            if stal_ is not None:
+                w = np.ones((c_pad, k_max), np.float32)
+                w[:len(ids_)] = (np.float32(staleness_discount)
+                                 ** np.asarray(stal_,
+                                               np.float32))[:, None]
+                w = jnp.asarray(w)
+            return jnp.asarray(sz), jnp.asarray(tk), jnp.asarray(vd), w
+
+        # -- phase A: fold the (T+1,) size totals / membership counts
+        totals = jnp.zeros((n_seg,), jnp.float32)
+        nt_acc = jnp.zeros((n_seg,), jnp.float32)
+        w_chunks: List[Optional[jax.Array]] = []
+        for ids_, tasks_, sizes_, stal_ in metas:
+            sz, tk, vd, w = _scalar_chunk(ids_, tasks_, sizes_, stal_)
+            w_chunks.append(w)
+            args = (sz, vd, tk, totals, nt_acc)
+            totals, nt_acc = scal(*args, w) if w is not None else scal(*args)
+
+        # -- phase B: second pass over the stream, fold merge partials
+        a_acc = jnp.zeros((n_seg, dp),
+                          jnp.int32 if packed else jnp.float32)
+        tau_acc = jnp.zeros((n_seg, dp), jnp.float32)
+        stage = SlotStage()
+        stream = make_iter()
+        uplink_bits = 0
+        for ci, (ids_, tasks_, sizes_, stal_) in enumerate(metas):
+            ups = list(itertools.islice(stream, len(ids_)))
+            if [u.client_id for u in ups] != ids_:
+                raise ValueError(
+                    "round_chunked: the upload factory returned a "
+                    "different round on the second pass — it must be "
+                    "deterministic (same clients, same order)")
+            batch = pack_uploads(ups, self.cfg.n_tasks, n_max=c_pad,
+                                 k_max=k_max, packed=packed, mesh=self.mesh,
+                                 stage=stage, phase_us=phase_us)
+            uplink_bits += batch.wire_bits()
+            args = (batch.unified, batch.slot_masks, batch.slot_lams,
+                    batch.slot_sizes, batch.slot_valid, batch.slot_tasks,
+                    totals, a_acc, tau_acc)
+            if w_chunks[ci] is not None:
+                args += (w_chunks[ci],)
+            a_acc, tau_acc = merge(*args)
+            # the dispatched step may alias the staged host buffers
+            # zero-copy (CPU jnp.asarray) — block before the refill
+            jax.block_until_ready(tau_acc)
+
+        # -- finish: Eq. 3/5/6/7 + λ numerator from the accumulators
+        tv, tau_hats, third, n_t, sim, num_t = finish(a_acc, tau_acc, nt_acc)
+        tv_run = tv                    # keeps the shard padding for phase C
+        if self.n_shards > 1 and d_pad != d:
+            tv, tau_hats, third = tv[:, :d], tau_hats[:, :d], third[:, :d]
+        if packed:
+            out = EngineOutput(tv, tau_hats, sim, None, None, None,
+                               alpha_num=third, n_held=n_t,
+                               rho=self.cfg.rho)
+        else:
+            out = EngineOutput(tv, tau_hats, sim, None, None, None,
+                               rho=self.cfg.rho, m_hats_dense=third)
+
+        # -- phase C: per-chunk downlink re-unification, streamed out
+        dw = bitpack.packed_width(d)
+        downlinks: Dict[int, ClientDownlink] = {}
+        downlink_bits = 0
+        for ids_, tasks_, sizes_, stal_ in metas:
+            tk = np.full((c_pad, k_max), self.cfg.n_tasks, np.int32)
+            vd = np.zeros((c_pad, k_max), bool)
+            for i, tl in enumerate(tasks_):
+                tk[i, :len(tl)] = tl
+                vd[i, :len(tl)] = True
+            du, dm, dl = down(tv_run, jnp.asarray(vd), jnp.asarray(tk),
+                              num_t)
+            if self.n_shards > 1 and d_pad != d:
+                du = du[:, :d]
+                dm = dm[:, :, :dw] if packed else dm[:, :, :d]
+            links = _assemble_downlinks(ids_, tasks_, d, du, dm, dl,
+                                        code_masks=code_masks,
+                                        phase_us=phase_us)
+            downlink_bits += sum(link.downlink_bits()
+                                 for link in links.values())
+            if sink is not None:
+                sink(links)
+            else:
+                downlinks.update(links)
+
+        stats = {"uplink_bits": uplink_bits,
+                 "downlink_bits": downlink_bits,
+                 "n_clients": n_clients, "n_chunks": len(metas),
+                 "chunk_clients": C}
+        return downlinks, out, stats
 
     def round_stream(self, rounds, *, mode: Optional[str] = None,
                      packed: bool = True, code_masks: bool = False,

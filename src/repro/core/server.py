@@ -17,7 +17,7 @@ parity tests and the baseline of ``benchmarks/bench_round_engine.py``.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +75,27 @@ class MaTUServer:
                                        staleness=staleness)
         self._record(out)
         return downs
+
+    def round_chunked(self, uploads, *, chunk_clients: int,
+                      code_masks: bool = False,
+                      staleness: Optional[List[int]] = None,
+                      k_max: Optional[int] = None,
+                      sink=None) -> Tuple[Dict[int, ClientDownlink],
+                                          Dict[str, int]]:
+        """Population-scale server step: stream ``uploads`` (a sequence
+        or a zero-arg iterator factory) through the engine's fixed-shape
+        chunk buffer — memory O(chunk + T·d) independent of the round's
+        client count, bit-identical to :meth:`round` in ref mode (the
+        engine's "Population-scale contract").  ``sink``, when given,
+        receives each chunk's downlink dict as produced and the
+        returned dict stays empty (no per-client state accumulates).
+        Returns ``(downlinks, stats)`` with the measured wire-bit
+        accounting in ``stats``."""
+        downs, out, stats = self.engine.round_chunked(
+            uploads, chunk_clients=chunk_clients, code_masks=code_masks,
+            staleness=staleness, k_max=k_max, sink=sink)
+        self._record(out)
+        return downs, stats
 
     def round_packed(self, packed: PackedRound, *,
                      code_masks: bool = False) -> Dict[int, ClientDownlink]:

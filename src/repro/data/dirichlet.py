@@ -71,6 +71,95 @@ def dirichlet_split(
     return FedSplit(tasks, class_probs, data_sizes)
 
 
+# stream tags keeping the lazy population draws independent: every
+# derived rng seeds a fresh SeedSequence from (seed, TAG, ...), so the
+# per-client assignment, per-(client, task) local stats, and per-round
+# sampling streams never interleave — asking for client c's tasks can
+# never perturb client c+1's, no matter the order (or how often) the
+# questions are asked.
+_POP_CLIENT, _POP_LOCAL, _POP_ROUND = 0x11, 0x22, 0x33
+
+
+@dataclass
+class PopulationSplit:
+    """Lazy Dirichlet task assignment over an arbitrarily large client
+    population (the 10^5–10^6 scale-out setting).
+
+    Holds O(T) state only: the Dir(ζ_t) task-popularity vector, drawn
+    once from ``seed``.  Everything per-client is DERIVED on demand
+    from an order-invariant rng seeded by ``(seed, tag, client_id)``,
+    so a population of N clients costs nothing until a client is
+    actually sampled, and the same client id always resolves to the
+    same tasks/sizes regardless of when or how often it is asked for
+    (the round engine's two-pass streaming contract relies on exactly
+    this).  Distributions match :func:`dirichlet_split` — minus the
+    coverage fix-up, which is both O(N) and unnecessary at population
+    scale, where every task is held w.h.p.
+    """
+    n_clients: int
+    n_tasks: int
+    n_classes: int = 10
+    tasks_per_client: Optional[int] = None
+    zeta_t: float = 0.5
+    zeta_c: float = 0.1
+    base_samples: int = 256
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self.popularity: Optional[np.ndarray] = (
+            rng.dirichlet([self.zeta_t] * self.n_tasks)
+            if self.zeta_t > 0.0 else None)
+
+    def tasks_for(self, client_id: int) -> List[int]:
+        """Client ``client_id``'s task ids (sorted), derived lazily.
+        ``zeta_t == 0`` reproduces the single-task round-robin
+        setting, like :func:`dirichlet_split`."""
+        if self.popularity is None:
+            return [int(client_id) % self.n_tasks]
+        rng = np.random.default_rng((self.seed, _POP_CLIENT, int(client_id)))
+        k = self.tasks_per_client or int(
+            rng.integers(1, min(self.n_tasks, 5) + 1))
+        k = min(k, self.n_tasks)
+        chosen = rng.choice(self.n_tasks, size=k, replace=False,
+                            p=self.popularity / self.popularity.sum())
+        return sorted(int(t) for t in chosen)
+
+    def local_stats(self, client_id: int, task_id: int
+                    ) -> tuple:
+        """(class_probs, data_size) for one (client, task) pair —
+        same Dir(ζ_c) class skew and size law as the eager split."""
+        rng = np.random.default_rng(
+            (self.seed, _POP_LOCAL, int(client_id), int(task_id)))
+        p = rng.dirichlet([max(self.zeta_c, 1e-3)] * self.n_classes)
+        size = int(self.base_samples * (0.5 + rng.random()))
+        return p.astype(np.float64) / p.sum(), size
+
+    def data_sizes_for(self, client_id: int) -> List[int]:
+        """Data sizes aligned with ``tasks_for(client_id)``."""
+        return [self.local_stats(client_id, t)[1]
+                for t in self.tasks_for(client_id)]
+
+    def sample_round(self, round_idx: int, n_sampled: int) -> np.ndarray:
+        """Deterministic without-replacement client sample for a round
+        — O(n_sampled) rejection draws when the sample is a small
+        fraction of the population, O(N) permutation otherwise (never
+        hit at population scale)."""
+        rng = np.random.default_rng((self.seed, _POP_ROUND, int(round_idx)))
+        n, k = self.n_clients, min(int(n_sampled), self.n_clients)
+        if k * 8 >= n:
+            return rng.permutation(n)[:k].astype(np.int64)
+        seen: set = set()
+        out: List[int] = []
+        while len(out) < k:
+            for c in rng.integers(0, n, size=k - len(out)):
+                c = int(c)
+                if c not in seen:
+                    seen.add(c)
+                    out.append(c)
+        return np.asarray(out, np.int64)
+
+
 def assign_fixed_groups(n_clients: int, task_groups: List[List[int]]) -> FedSplit:
     """Fixed task-group assignment (Fig. 6a conflict experiments):
     client c gets task_groups[c % len(task_groups)] with uniform classes."""

@@ -75,7 +75,11 @@ Both directions stream in bounded chunks (``_ENC_CHUNK_BITS``,
 global, only the bit scatter/gather is windowed, so chunking is
 byte-invisible (tests monkeypatch tiny chunks to prove it) while
 numpy temps stay small enough to recycle warm allocator pages
-instead of round-tripping through mmap.
+instead of round-tripping through mmap.  Byte-invisibility also makes
+the chunks INDEPENDENT, so on a multi-core host both directions fan
+them out over a shared thread pool (``_coder_pool``; order-preserving
+``executor.map``, so the pool cannot change a single output byte —
+1-core hosts keep the sequential loop).
 
 Records are self-delimiting, so streams CONCATENATE: the batched
 decoder walks k records out of several clients' concatenated uploads
@@ -101,6 +105,8 @@ combines both: 16d + Σ_k (coded mask stream + 32-bit scaler).
 from __future__ import annotations
 
 import math
+import os
+from concurrent.futures import ThreadPoolExecutor
 from typing import Optional, Tuple
 
 import jax
@@ -140,6 +146,37 @@ _ENC_CHUNK_BITS = 1 << 21   # mask bits (rows × d) encoded per chunk
 _DEC_WINDOW_BYTES = 1 << 17  # stream bytes unpacked per decode chunk
 _DEC_DENSE_BITS = 1 << 22   # dense (rows × d) reconstructed per chunk
 
+# Because chunking is byte-invisible (records self-delimit and every
+# chunk's extent is known before any chunk runs), the chunks are
+# INDEPENDENT — so on a multi-core host both directions fan them out
+# over a shared thread pool (numpy releases the GIL for the big
+# unpack/scatter/packbits passes).  ``executor.map`` preserves chunk
+# order, so the concatenated stream / row writes are byte-for-byte the
+# sequential ones no matter how the pool schedules — enforced by the
+# monkeypatched-tiny-chunk parity test in tests/test_compression.py.
+# REPRO_CODER_WORKERS overrides the worker count (1 → sequential).
+_pool: Optional[ThreadPoolExecutor] = None
+_pool_workers = 0
+
+
+def _coder_workers() -> int:
+    env = os.environ.get("REPRO_CODER_WORKERS")
+    return int(env) if env else (os.cpu_count() or 1)
+
+
+def _coder_pool() -> Optional[ThreadPoolExecutor]:
+    """The shared coder pool, or None on a 1-worker host (sequential
+    fallback — identical bytes either way)."""
+    global _pool, _pool_workers
+    n = _coder_workers()
+    if n <= 1:
+        return None
+    if _pool is None or _pool_workers != n:
+        _pool = ThreadPoolExecutor(max_workers=n,
+                                   thread_name_prefix="rice-coder")
+        _pool_workers = n
+    return _pool
+
 # (256, 8) lookup: _NTH_ONE[v, i] = LSB-first bit index of the
 # (i+1)-th set bit of byte value v (8 where v has fewer ones).  With
 # the cumulative byte popcount this turns "position of the n-th
@@ -151,6 +188,9 @@ for _v in range(256):
         np.unpackbits(np.array([_v], np.uint8), bitorder="little"))
     _NTH_ONE[_v, :_idx.size] = _idx
 del _v, _idx
+# plain-Python twin for the decoder's boundary walk (no numpy-scalar
+# boxing in the per-record hot loop)
+_NTH_ONE_L = _NTH_ONE.tolist()
 
 
 def mask_entropy_bits(mask: np.ndarray) -> float:
@@ -493,11 +533,18 @@ def encode_mask_rows_with_sizes(words: np.ndarray, d: int
     rows_per = max(1, _ENC_CHUNK_BITS // (32 * w))
     if r <= rows_per:
         return _encode_rows_chunk(words, d)
-    streams, sizes = [], []
-    for i in range(0, r, rows_per):
-        s, z = _encode_rows_chunk(words[i:i + rows_per], d)
-        streams.append(s)
-        sizes.append(z)
+    chunk_starts = range(0, r, rows_per)
+    pool = _coder_pool()
+    if pool is None:
+        parts = [_encode_rows_chunk(words[i:i + rows_per], d)
+                 for i in chunk_starts]
+    else:
+        # independent chunks on the pool; map preserves chunk order, so
+        # the concatenation is byte-identical to the sequential loop
+        parts = list(pool.map(
+            lambda i: _encode_rows_chunk(words[i:i + rows_per], d),
+            chunk_starts))
+    streams, sizes = zip(*parts)
     return np.concatenate(streams), np.concatenate(sizes)
 
 
@@ -617,51 +664,74 @@ def decode_mask_rows(stream: np.ndarray, d: int, k: int) -> np.ndarray:
     cpc = np.zeros(stream.size + 1, np.int64)
     np.cumsum(np.bitwise_count(stream), dtype=np.int64, out=cpc[1:])
 
-    # phase 1: boundary walk — O(1) per record plus one searchsorted
+    # phase 1: boundary walk.  The chain is inherently serial (each
+    # record's extent gates the next record's offset) and a global bit
+    # unpack would break the bounded-memory contract, so instead of
+    # vectorising across records the walk batches each step down to
+    # pure-Python byte reads (memoryview + int.from_bytes — no numpy
+    # slice/view per record) plus ONE C binary search confined to the
+    # record's own ≤ 4w-byte window of the popcount prefix (the raw
+    # escape bounds every record, so the window always brackets the
+    # terminator) — identical offsets and errors to the original
+    # full-array walk, at a fraction of the per-record overhead.
+    mv = stream.data
+    size = stream.size
+    cpc_at = cpc.item              # unboxed scalar reads in the loop
+    nth_l = _NTH_ONE_L             # (cpc stays numpy: tolist() would
+    search = cpc.searchsorted      # cost O(stream) Python ints)
     empty_rows, empty_pol = [], []
     raw_rows, raw_offs = [], []
     rice = dict(row=[], kk=[], n=[], pb=[], unary=[], pol=[], end=[])
+    (r_row, r_kk, r_n, r_pb, r_unary, r_pol, r_end) = (
+        rice["row"].append, rice["kk"].append, rice["n"].append,
+        rice["pb"].append, rice["unary"].append, rice["pol"].append,
+        rice["end"].append)
+    raw_len = HEADER_BYTES + 4 * w
     off = 0
     for i in range(k):
-        if off + HEADER_BYTES > stream.size:
+        if off + HEADER_BYTES > size:
             raise CodedStreamError("rice_decode_words: truncated header")
-        flags = int(stream[off])
+        flags = mv[off]
         pol = flags & _POLARITY_BIT
         if flags & _RAW_BIT:
-            if off + HEADER_BYTES + 4 * w > stream.size:
+            if off + raw_len > size:
                 raise CodedStreamError("rice_decode_words: truncated raw payload")
             raw_rows.append(i)
             raw_offs.append(off + HEADER_BYTES)
-            off += HEADER_BYTES + 4 * w
+            off += raw_len
             continue
-        n = int(stream[off + 1:off + 5].view("<u4")[0])
+        n = int.from_bytes(mv[off + 1:off + 5], "little")
         if n == 0:
             empty_rows.append(i)
             empty_pol.append(pol)
             off += HEADER_BYTES
             continue
         pb_byte = off + HEADER_BYTES
-        lim_byte = min(stream.size, pb_byte + 4 * w)
-        target = int(cpc[pb_byte]) + n
-        if target > int(cpc[lim_byte]):
+        lim_byte = pb_byte + 4 * w
+        if lim_byte > size:
+            lim_byte = size
+        target = cpc_at(pb_byte) + n
+        if target > cpc_at(lim_byte):
             raise CodedStreamError("rice_decode_words: truncated unary section")
-        # byte holding the n-th one-bit after pb, then the bit within it
-        jbyte = int(np.searchsorted(cpc, target, side="left")) - 1
-        bit = int(_NTH_ONE[stream[jbyte], target - int(cpc[jbyte]) - 1])
+        # byte holding the n-th one-bit after pb, then the bit within
+        # it; cpc[pb] < target ≤ cpc[lim] brackets the terminator, so
+        # the global search equals a window search and stays O(log S)
+        jbyte = int(search(target, side="left")) - 1
+        bit = nth_l[mv[jbyte]][target - cpc_at(jbyte) - 1]
         kk = flags >> _K_SHIFT
         unary = 8 * (jbyte - pb_byte) + bit + 1
         if unary + n * kk > 8 * (lim_byte - pb_byte):
             raise CodedStreamError("rice_decode_words: truncated remainders")
-        rice["row"].append(i)
-        rice["kk"].append(kk)
-        rice["n"].append(n)
-        rice["pb"].append(8 * pb_byte)
-        rice["unary"].append(unary)
-        rice["pol"].append(pol)
+        r_row(i)
+        r_kk(kk)
+        r_n(n)
+        r_pb(8 * pb_byte)
+        r_unary(unary)
+        r_pol(pol)
         off += HEADER_BYTES + -(-(unary + n * kk) // 8)
-        rice["end"].append(off)
-    if off != stream.size:
-        raise CodedStreamError(f"decode_mask_rows: {stream.size - off} trailing "
+        r_end(off)
+    if off != size:
+        raise CodedStreamError(f"decode_mask_rows: {size - off} trailing "
                          f"bytes after {k} rows")
 
     # phase 2: vectorized reconstruction
@@ -688,17 +758,32 @@ def decode_mask_rows(stream: np.ndarray, d: int, k: int) -> np.ndarray:
         end = np.asarray(rice["end"], np.int64)
         lo = pb // 8
         nr = rows.size
+        spans = []
         i0 = 0
         while i0 < nr:               # bounded windows over the records
             i1 = i0 + 1
             while (i1 < nr and end[i1] - lo[i0] <= _DEC_WINDOW_BYTES
                    and (i1 + 1 - i0) * d <= _DEC_DENSE_BITS):
                 i1 += 1
-            sl = slice(i0, i1)
-            _decode_rice_chunk(stream, out, d, int(lo[i0]), int(end[i1 - 1]),
+            spans.append((i0, i1))
+            i0 = i1
+
+        def _one(span):
+            a, b = span
+            sl = slice(a, b)
+            _decode_rice_chunk(stream, out, d, int(lo[a]), int(end[b - 1]),
                                rows[sl], kk[sl], n[sl], pb[sl], unary[sl],
                                pol[sl])
-            i0 = i1
+
+        pool = _coder_pool()
+        if pool is None or len(spans) == 1:
+            for span in spans:
+                _one(span)
+        else:
+            # windows write DISJOINT out[rows] regions, so pooled
+            # execution is race-free and bit-identical; map raises the
+            # first window's CodedStreamError like the loop would
+            list(pool.map(_one, spans))
     return out
 
 

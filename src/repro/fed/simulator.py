@@ -35,6 +35,26 @@ RNG keys are failure-invariant by construction: selection draws from
 sequentially split stream — so injecting a fault for one client cannot
 perturb any other client's draws (the satellite regression in
 tests/test_systems.py).
+
+Population mode
+---------------
+:class:`PopulationSimulator` is the client-axis scale-out harness: a
+lazy :class:`~repro.data.dirichlet.PopulationSplit` over 10^5–10^6
+clients, per-round sampling, and the chunked server round
+(``MaTUServer.round_chunked``) so a round's memory is O(chunk + T·d)
+regardless of how many clients report.  Nothing per-client is ever
+materialised for the non-sampled population: a sampled client's upload
+is derived on demand from ``(seed, round, client_id)`` plus the
+current global task vectors, regenerated identically on the engine's
+second streaming pass, and its downlink is handed to a sink instead of
+cached — so neither the simulator nor the strategy layer grows state
+with the population.  ``History`` rows stay the aggregate per-round
+scalars they are in the sync loop (measured wire bits, fault
+counters); ``FedConfig.eval_every`` gates evaluation exactly as in
+:meth:`FedSimulator.run`.  Local "training" is the synthetic drift
+model ``τ ← τ + step·(g_t − τ) + noise`` toward fixed hidden per-task
+targets g_t, so convergence (cosine alignment to g_t, reported through
+``History.task_acc``) is meaningful without per-client model state.
 """
 
 from __future__ import annotations
@@ -47,7 +67,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.dirichlet import FedSplit
+from repro.core.client import ClientUpload
+from repro.core.server import MaTUServer, MaTUServerConfig
+from repro.core.unify import unify_with_modulators
+from repro.data.dirichlet import FedSplit, PopulationSplit
 from repro.data.synthetic import Constellation, eval_batch, sample_task_batch
 from repro.fed.local import make_head, make_local_trainer
 from repro.fed.strategies import RoundBatch, Strategy, Upload
@@ -356,6 +379,137 @@ class FedSimulator:
                 if verbose:
                     print(f"[{self.strategy.name}] round {r+1:3d} "
                           f"mean_acc={hist.mean_acc[-1]:.3f} bits={bits:,}")
+        return hist
+
+
+# population-mode rng stream tags — disjoint from PopulationSplit's
+# (0x11/0x22/0x33) so simulator draws never collide with split draws
+# under the same base seed
+_POP_TARGET, _POP_UPDATE, _POP_DROP = 0x44, 0x55, 0x66
+
+
+class PopulationSimulator:
+    """Client-axis scale-out harness over a lazy population (see
+    "Population mode" in the module docstring).
+
+    ``clients_per_round`` defaults to ``participation · n_clients`` —
+    set it (or a small ``FedConfig.participation``) explicitly for
+    populations where training the whole cohort is not the point.
+    ``mesh``: optional jax Mesh — the chunked round then runs sharded
+    (taskvec d-axis, plus slot rows on a ``make_population_mesh``).
+    ``sink``: optional per-chunk downlink consumer; the default
+    discards them so no per-client state accumulates anywhere.
+    """
+
+    def __init__(self, cfg: FedConfig, split: PopulationSplit,
+                 server_cfg: Optional[MaTUServerConfig] = None, *,
+                 d: int = 4096, clients_per_round: Optional[int] = None,
+                 chunk_clients: int = 64, step: float = 0.3,
+                 noise: float = 1e-2, dropout_prob: float = 0.0,
+                 code_masks: bool = False, mesh=None, sink=None):
+        self.cfg = cfg
+        self.split = split
+        self.d = int(d)
+        self.n_tasks = split.n_tasks
+        self.chunk_clients = int(chunk_clients)
+        self.step = float(step)
+        self.noise = float(noise)
+        self.dropout_prob = float(dropout_prob)
+        self.code_masks = code_masks
+        self.sink = sink if sink is not None else (lambda links: None)
+        self.clients_per_round = int(
+            clients_per_round if clients_per_round is not None
+            else max(1, round(cfg.participation * split.n_clients)))
+        self.server = MaTUServer(
+            server_cfg or MaTUServerConfig(n_tasks=split.n_tasks), mesh=mesh)
+        # hidden per-task targets the synthetic local updates drift
+        # toward — O(T·d), the same footprint class as the round itself
+        trg = np.random.default_rng((cfg.seed, _POP_TARGET)).standard_normal(
+            (self.n_tasks, self.d)).astype(np.float32)
+        self._targets = trg / np.linalg.norm(trg, axis=1, keepdims=True)
+        self._tv_host = np.zeros((self.n_tasks, self.d), np.float32)
+
+    # -- lazy client derivation --------------------------------------------
+    def _dropout(self, c: int, r: int) -> bool:
+        return bool(self.dropout_prob > 0.0 and np.random.default_rng(
+            (self.cfg.seed, _POP_DROP, int(r), int(c))).random()
+            < self.dropout_prob)
+
+    def _make_upload(self, c: int, r: int, tv: np.ndarray) -> ClientUpload:
+        """Derive client ``c``'s round-``r`` upload from scratch:
+        tasks/sizes from the lazy split, update noise from the
+        order-invariant (seed, round, client) stream, drift from the
+        CURRENT global task vectors ``tv`` (frozen for the round, so
+        the engine's two streaming passes see identical uploads)."""
+        ts = self.split.tasks_for(c)
+        rng = np.random.default_rng((self.cfg.seed, _POP_UPDATE,
+                                     int(r), int(c)))
+        rows = np.empty((len(ts), self.d), np.float32)
+        sizes = []
+        for i, t in enumerate(ts):
+            z = rng.standard_normal(self.d).astype(np.float32)
+            rows[i] = tv[t] + self.step * (self._targets[t] - tv[t]) \
+                + self.noise * z
+            sizes.append(self.split.local_stats(c, t)[1])
+        unified, masks, lams = unify_with_modulators(jnp.asarray(rows))
+        return ClientUpload(int(c), ts, unified, masks, lams, sizes)
+
+    def _upload_factory(self, ids: List[int], r: int):
+        tv = self._tv_host  # frozen snapshot for both engine passes
+
+        def gen():
+            for c in ids:
+                yield self._make_upload(c, r, tv)
+
+        return gen
+
+    # -- evaluation ---------------------------------------------------------
+    def evaluate(self) -> Dict[int, float]:
+        """Per-task alignment of the server's task vector with its
+        hidden target, mapped to [0, 1] (cosine → (1+cos)/2)."""
+        out = {}
+        for t in range(self.n_tasks):
+            v, g = self._tv_host[t], self._targets[t]
+            den = float(np.linalg.norm(v) * np.linalg.norm(g))
+            out[t] = 0.5 * (1.0 + float(v @ g) / den) if den > 0 else 0.0
+        return out
+
+    # -- main loop ----------------------------------------------------------
+    def run(self, verbose: bool = False) -> History:
+        cfg = self.cfg
+        hist = History()
+        for r in range(cfg.rounds):
+            counters = blank_fault_counters()
+            ids = self.split.sample_round(r, self.clients_per_round)
+            counters["sampled"] = int(len(ids))
+            if self.dropout_prob > 0.0:
+                keep = np.asarray([not self._dropout(int(c), r)
+                                   for c in ids], bool)
+                counters["dropped"] = int(len(ids) - keep.sum())
+                ids = ids[keep]
+            stats = {"uplink_bits": 0, "downlink_bits": 0}
+            if len(ids):
+                _, stats = self.server.round_chunked(
+                    self._upload_factory([int(c) for c in ids], r),
+                    chunk_clients=self.chunk_clients,
+                    code_masks=self.code_masks, sink=self.sink)
+                self._tv_host = np.asarray(self.server.last_task_vectors)
+            else:
+                counters["skipped"] = 1
+            counters["admitted"] = int(len(ids))
+            hist.fault_counts.append(counters)
+            hist.phase_us.append({})
+            if (r + 1) % cfg.eval_every == 0 or r == cfg.rounds - 1:
+                acc = self.evaluate()
+                hist.rounds.append(r + 1)
+                hist.task_acc.append(acc)
+                hist.mean_acc.append(float(np.mean(list(acc.values()))))
+                hist.uplink_bits_per_round.append(stats["uplink_bits"])
+                hist.downlink_bits_per_round.append(stats["downlink_bits"])
+                if verbose:
+                    print(f"[population] round {r+1:3d} "
+                          f"align={hist.mean_acc[-1]:.3f} "
+                          f"bits={stats['uplink_bits']:,}")
         return hist
 
 

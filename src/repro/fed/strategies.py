@@ -171,7 +171,7 @@ class MaTUStrategy(Strategy):
                  eps: float = 0.5, kappa: int = 3, cross_task: bool = True,
                  uniform_cross: bool = False, compress: bool = False,
                  code_masks: bool = False, pipeline: bool = False,
-                 mesh=None):
+                 chunk_clients: Optional[int] = None, mesh=None):
         super().__init__(n_tasks, d)
         self.mesh = mesh
         self.server = MaTUServer(MaTUServerConfig(
@@ -195,6 +195,16 @@ class MaTUStrategy(Strategy):
         # a different order — bit-identical to pipeline=False (the
         # tests/test_pipeline.py contract).
         self.pipeline = pipeline
+        # ``chunk_clients``: route the server step through the engine's
+        # chunked-slot fold (``MaTUServer.round_chunked``) so its slot
+        # tensors stay O(chunk_clients) instead of O(N) — the
+        # population-scale engine path under the regular simulator.
+        # Bit-identical to the batched path in ref mode; synchronous
+        # (downlinks stream out of phase C chunk by chunk, so there is
+        # no deferred drain to pipeline).  With ``code_masks`` the
+        # DOWNLINK still ships coded; the uplink stays raw packed words
+        # (per-chunk uplink coding is the async/population wire's job).
+        self.chunk_clients = chunk_clients
         self._pending = None     # (packed, out, phase_us, t_dispatch)
         self._last_uploads: List[ClientUpload] = []
 
@@ -249,6 +259,9 @@ class MaTUStrategy(Strategy):
         round is left dispatched-but-undrained on return (downlinks
         materialise at first use); either way at most one round is ever
         in flight."""
+        if self.chunk_clients:
+            self._aggregate_chunked(batch)
+            return
         self._drain()
         phase: Dict[str, float] = {}
         t0 = time.perf_counter()
@@ -297,6 +310,36 @@ class MaTUStrategy(Strategy):
         self._pending = (packed, out, phase, t_disp)
         if not self.pipeline:
             self._drain()
+
+    def _aggregate_chunked(self, batch: RoundBatch) -> None:
+        """Chunked server step: the SAME wire buffers as the batched
+        path (one fused unify — bit-parity with ``aggregate_batch``
+        requires the identical bf16/packed-word rounding), streamed
+        through ``MaTUServer.round_chunked`` so the engine never
+        materialises the O(N·k_max·d/32) slot tensors."""
+        self._drain()
+        phase: Dict[str, float] = {}
+        t0 = time.perf_counter()
+        unified, mask_words, lams = batched_client_unify(
+            batch.task_vectors, batch.valid, mesh=self.mesh)
+        dw = bitpack.packed_width(self.d)
+        ups = []
+        for i, u in enumerate(batch.uploads):
+            k = len(u.task_ids)
+            ups.append(ClientUpload(u.client_id, list(u.task_ids),
+                                    unified[i, :self.d],
+                                    mask_words[i, :k, :dw], lams[i, :k],
+                                    list(u.data_sizes)))
+            self.client_tasks[u.client_id] = list(u.task_ids)
+        phase["pack"] = (time.perf_counter() - t0) * 1e6
+        t1 = time.perf_counter()
+        downs, _ = self.server.round_chunked(
+            ups, chunk_clients=self.chunk_clients,
+            code_masks=self.code_masks)
+        phase["device"] = (time.perf_counter() - t1) * 1e6
+        self.downlinks.update(downs)
+        self._last_uploads = ups
+        self.last_phase_us = phase
 
     def skip_round(self) -> None:
         """Empty round: drain any in-flight round, then clear the

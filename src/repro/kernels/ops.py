@@ -330,7 +330,8 @@ def _apply_slot_weights(slot_lams, slot_sizes, slot_weights):
     if slot_weights is None:
         return slot_lams, slot_sizes
     w = slot_weights.astype(jnp.float32)
-    return slot_lams * w, slot_sizes * w
+    lams = None if slot_lams is None else slot_lams * w
+    return lams, slot_sizes * w
 
 
 def matu_round_slots(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
@@ -484,3 +485,123 @@ def matu_round_slots_packed(unified, slot_mask_words, slot_lams, slot_sizes,
     down_lams = num / jnp.maximum(den, lam_eps)
     return (task_vectors, tau_hats, alpha_num, n_held, sim,
             down_unified, down_mask_words, down_lams)
+
+
+# ---------------------------------------------------------------------------
+# Chunked-slot hierarchical aggregation (client-axis streaming round).
+#
+# Every dispatch mode routes to the streaming jnp implementation in
+# ``repro.kernels.ref`` — the chunk folds are scatter-adds and
+# cache-blocked elementwise sweeps that XLA already emits optimally,
+# and the chunk-count-invariance contract (chunked ≡ monolithic
+# bitwise in ref mode) is defined against that implementation.  The
+# Pallas kernels remain the monolithic round's accelerated path.
+# ---------------------------------------------------------------------------
+
+
+def matu_chunk_scalars(slot_sizes, slot_valid, slot_tasks, totals_acc,
+                       nt_acc, *, slot_weights=None,
+                       mode: Optional[str] = None):
+    """Phase A of the chunked round: fold one chunk's per-task size
+    totals (γ normaliser) and membership counts (Eq. 3 N_t) into the
+    carried (T+1,) accumulators.  ``slot_weights`` applies the async
+    staleness discount to the sizes exactly as the monolithic round
+    does (:func:`_apply_slot_weights`)."""
+    _norm(mode)
+    _, slot_sizes = _apply_slot_weights(None, slot_sizes, slot_weights)
+    return ref.matu_chunk_scalars_ref(slot_sizes, slot_valid, slot_tasks,
+                                      totals_acc, nt_acc)
+
+
+def matu_merge_chunk(unified, slot_masks, slot_lams, slot_sizes, slot_valid,
+                     slot_tasks, totals, a_acc, tau_acc, *,
+                     slot_weights=None, mode: Optional[str] = None):
+    """Phase B of the chunked round, bool/fp32 layout: fold one client
+    chunk's Eq. 3 sign votes and Eq. 4 merge partials into the carried
+    (T+1, dp) fp32 accumulators (``totals`` from phase A)."""
+    _norm(mode)
+    slot_lams, slot_sizes = _apply_slot_weights(slot_lams, slot_sizes,
+                                                slot_weights)
+    return ref.matu_merge_chunk_ref(unified, slot_masks, slot_lams,
+                                    slot_sizes, slot_valid, slot_tasks,
+                                    totals, a_acc, tau_acc)
+
+
+def matu_merge_chunk_packed(unified, slot_mask_words, slot_lams, slot_sizes,
+                            slot_valid, slot_tasks, totals, a_acc, tau_acc,
+                            d: int, *, slot_weights=None,
+                            mode: Optional[str] = None):
+    """Phase B, wire layout: ``a_acc`` is (T+1, dp) int32 (exact sign
+    votes), ``tau_acc`` (T+1, dp) fp32; ``d`` is static (local count
+    under ``shard_map``)."""
+    _norm(mode)
+    slot_lams, slot_sizes = _apply_slot_weights(slot_lams, slot_sizes,
+                                                slot_weights)
+    return ref.matu_merge_chunk_packed_ref(unified, slot_mask_words,
+                                           slot_lams, slot_sizes, slot_valid,
+                                           slot_tasks, totals, a_acc,
+                                           tau_acc, d=d)
+
+
+def matu_finish(a_acc, tau_acc, nt_acc, *, n_tasks: int, d: int,
+                rho: float = 0.4, eps: float = 0.5, kappa: int = 3,
+                cross_task: bool = True, uniform_cross: bool = False,
+                mode: Optional[str] = None,
+                axis_name=None, axis_sizes=(), d_norm: int = 0):
+    """Finish the chunked bool-layout round from the accumulators:
+    returns (task_vectors, tau_hats, m_hats, n_t, similarity, num_t)."""
+    _norm(mode)
+    return ref.matu_finish_ref(a_acc, tau_acc, nt_acc, n_tasks=n_tasks, d=d,
+                               rho=rho, eps=eps, kappa=kappa,
+                               cross_task=cross_task,
+                               uniform_cross=uniform_cross,
+                               axis_name=axis_name, axis_sizes=axis_sizes,
+                               d_norm=d_norm)
+
+
+def matu_finish_packed(a_acc, tau_acc, nt_acc, n_clients: int, *,
+                       n_tasks: int, d: int, rho: float = 0.4,
+                       eps: float = 0.5, kappa: int = 3,
+                       cross_task: bool = True, uniform_cross: bool = False,
+                       mode: Optional[str] = None,
+                       axis_name=None, axis_sizes=(), d_norm: int = 0):
+    """Finish the chunked packed round: returns (task_vectors, tau_hats,
+    alpha_num, n_t, similarity, num_t).  ``n_clients`` is the round's
+    total client count (it picks the monolithic ``alpha_dtype``)."""
+    _norm(mode)
+    return ref.matu_finish_packed_ref(a_acc, tau_acc, nt_acc, n_clients,
+                                      n_tasks=n_tasks, d=d, rho=rho, eps=eps,
+                                      kappa=kappa, cross_task=cross_task,
+                                      uniform_cross=uniform_cross,
+                                      axis_name=axis_name,
+                                      axis_sizes=axis_sizes, d_norm=d_norm)
+
+
+def matu_downlink_chunk(task_vectors, slot_valid, slot_tasks, num_t, *,
+                        n_tasks: int, lam_eps: float = 1e-12,
+                        mode: Optional[str] = None,
+                        axis_name=None, axis_sizes=()):
+    """Phase C, bool layout: downlink re-unification of one client chunk
+    from the finished task vectors.  Returns (down_unified (C, d) fp32,
+    down_masks (C, K, d) bool, down_lams (C, K)) — the λ division is
+    the monolithic round's ``num / max(den, lam_eps)``."""
+    _norm(mode)
+    uni, dmasks, num, den = ref.matu_downlink_chunk_ref(
+        task_vectors, slot_valid, slot_tasks, num_t, n_tasks=n_tasks,
+        axis_name=axis_name, axis_sizes=axis_sizes)
+    down_lams = num / jnp.maximum(den, lam_eps)
+    return uni, dmasks, down_lams
+
+
+def matu_downlink_chunk_packed(task_vectors, slot_tasks, num_t, d: int, *,
+                               lam_eps: float = 1e-12,
+                               mode: Optional[str] = None,
+                               axis_name=None, axis_sizes=()):
+    """Phase C, wire layout: returns (down_unified (C, d) bf16,
+    down_mask_words (C, K, ceil(d/32)) uint32, down_lams (C, K))."""
+    _norm(mode)
+    uni, dwords, num, den = ref.matu_downlink_chunk_packed_ref(
+        task_vectors, slot_tasks, num_t, d=d,
+        axis_name=axis_name, axis_sizes=axis_sizes)
+    down_lams = num / jnp.maximum(den, lam_eps)
+    return uni, dwords, down_lams

@@ -695,3 +695,440 @@ def cross_task_combine_ref(tau_hats: jax.Array, m_hats: jax.Array,
     has = (total > 0).astype(tau_hats.dtype)
     task_vectors = (tau_hats + tau_tildes * has) / (1.0 + has)
     return task_vectors, tau_tildes
+
+
+# ---------------------------------------------------------------------------
+# Chunked-slot hierarchical aggregation: the client-axis streaming round.
+#
+# The monolithic rounds above materialise every slot tensor for the
+# whole round — O(N·K·d) — which caps the client axis.  The four
+# functions per layout below split the identical math into per-chunk
+# folds over carried accumulators so a round's memory is O(chunk + T·d)
+# regardless of N:
+#
+#   phase A  ``matu_chunk_scalars_ref``    per chunk: fold sizes / valid
+#            counts into (T+1,) totals (the Eq. 4 γ normaliser needs
+#            global per-task size totals before any merge work).
+#   phase B  ``matu_merge_chunk[_packed]_ref``  per chunk: fold the
+#            Eq. 3 sign votes and Eq. 4 merge partials into carried
+#            (T+1, dp) accumulators.
+#   finish   ``matu_finish[_packed]_ref``  once: Eq. 3 α/m̂, Eq. 5 sign
+#            dots, Eq. 6 weights, Eq. 7 combine and the λ numerator
+#            from the accumulators — no slot tensors involved.
+#   phase C  ``matu_downlink_chunk[_packed]_ref``  per chunk: downlink
+#            re-unification of one client chunk from the finished task
+#            vectors (each slot row lives in exactly one chunk, so this
+#            phase is embarrassingly parallel over rows).
+#
+# Chunk-count invariance (the bit-identity contract): every fp32
+# client-axis reduction is ONE global sequential scatter fold —
+# ``acc.at[ids].add(x_chunk)`` carried across chunks applies the same
+# adds in the same global row order as the monolithic round's
+# whole-round ``segment_sum`` (XLA applies scatter updates in row
+# order on CPU), so the accumulated totals are bitwise equal for ANY
+# contiguous chunking, including a jitted fixed-shape chunk step with
+# sentinel-padded tail rows (padding rows carry the sentinel task id,
+# so their zeros land in the swallowed (T+1)-th bucket, never in a task
+# row).  The Eq. 3 votes and Eq. 5 dots are exact integers (order
+# free), and every d-axis reduction (λ block partials, CHUNK_D
+# streaming grid) keeps the monolithic grid — identical op shapes,
+# identical lowering, bitwise-identical results.  Under ``shard_map``
+# the merge fold never splits the client axis across devices (each
+# shard folds every row of its d-slice locally — no collectives);
+# the finish crosses shards exactly like the monolithic round (integer
+# dots psum + the shard-invariant ``_lam_totals`` tree) and phase C
+# adds one λ-denominator psum per chunk.
+# ---------------------------------------------------------------------------
+
+
+def matu_chunk_scalars_ref(slot_sizes: jax.Array, slot_valid: jax.Array,
+                           slot_tasks: jax.Array, totals_acc: jax.Array,
+                           nt_acc: jax.Array):
+    """Phase-A chunk step: fold one chunk's data sizes and validity
+    counts into the carried (T+1,) fp32 accumulators.
+
+    slot_sizes/slot_valid/slot_tasks (C, K); ``totals_acc`` accumulates
+    Σ size·valid per task (the γ normaliser), ``nt_acc`` the Eq. 3
+    membership count N_t.  Returns the updated (totals_acc, nt_acc).
+    """
+    m_rows = slot_sizes.shape[0] * slot_sizes.shape[1]
+    ids = slot_tasks.reshape(m_rows)
+    vf = slot_valid.reshape(m_rows).astype(jnp.float32)
+    sizes = slot_sizes.reshape(m_rows).astype(jnp.float32) * vf
+    return totals_acc.at[ids].add(sizes), nt_acc.at[ids].add(vf)
+
+
+def matu_merge_chunk_packed_ref(unified: jax.Array, slot_mask_words: jax.Array,
+                                slot_lams: jax.Array, slot_sizes: jax.Array,
+                                slot_valid: jax.Array, slot_tasks: jax.Array,
+                                totals: jax.Array, a_acc: jax.Array,
+                                tau_acc: jax.Array, *, d: int,
+                                chunk: int = CHUNK_D):
+    """Phase-B chunk step, wire layout: fold one client chunk's Eq. 3
+    sign votes (int32, exact) and Eq. 4 merge partials (fp32, global
+    row order) into the carried (T+1, dp) accumulators.
+
+    ``totals`` is the phase-A global size total (T+1,) — the γ weights
+    need it before any merge work, which is why the chunked round makes
+    two passes over the upload stream.  ``a_acc`` (T+1, dp) int32 and
+    ``tau_acc`` (T+1, dp) fp32 are carried across chunks; the d-axis
+    streaming grid is the monolithic round's (``_chunked``).  Under
+    ``shard_map`` every d-axis tensor is the local slice and ``d`` the
+    local count — the fold has no collectives.
+    """
+    n, k, dw_in = slot_mask_words.shape
+    m_rows = n * k
+    chunk, dp = _chunked(d, chunk)
+    dwc, dwp = chunk // 32, dp // 32
+
+    ids = slot_tasks.reshape(m_rows)
+    vf = slot_valid.reshape(m_rows).astype(jnp.float32)
+    sizes = slot_sizes.reshape(m_rows).astype(jnp.float32) * vf
+    gam = sizes / jnp.maximum(totals[ids], 1e-12)
+    glv = gam * slot_lams.reshape(m_rows).astype(jnp.float32) * vf
+    glv_nk = glv.reshape(n, k)
+
+    u_p = unified                       # stays bf16; upcast per chunk
+    m_w = slot_mask_words
+    if dp != d:
+        u_p = jnp.pad(u_p, ((0, 0), (0, dp - d)))
+    if dwp != dw_in:
+        m_w = jnp.pad(m_w, ((0, 0), (0, 0), (0, dwp - dw_in)))
+
+    def fold(c, carry):
+        a_acc, tau_acc = carry
+        off = c * chunk
+        uc = lax.dynamic_slice_in_dim(u_p, off, chunk,
+                                      axis=1).astype(jnp.float32)
+        mw = lax.dynamic_slice_in_dim(m_w, c * dwc, dwc, axis=2)
+        mi8 = bitpack.unpack_bits(mw, chunk, jnp.int8)         # (C, K, dc)
+        signs = (mi8 * jnp.sign(uc).astype(jnp.int8)[:, None, :])
+        a_blk = lax.dynamic_slice_in_dim(a_acc, off, chunk, axis=1)
+        a_blk = a_blk.at[ids].add(
+            signs.reshape(m_rows, chunk).astype(jnp.int32))
+        a_acc = lax.dynamic_update_slice_in_dim(a_acc, a_blk, off, axis=1)
+        recon = mi8.astype(jnp.float32) * (glv_nk[:, :, None]
+                                           * uc[:, None, :])
+        t_blk = lax.dynamic_slice_in_dim(tau_acc, off, chunk, axis=1)
+        t_blk = t_blk.at[ids].add(recon.reshape(m_rows, chunk))
+        tau_acc = lax.dynamic_update_slice_in_dim(tau_acc, t_blk, off, axis=1)
+        return a_acc, tau_acc
+
+    return lax.fori_loop(0, dp // chunk, fold, (a_acc, tau_acc))
+
+
+def matu_merge_chunk_ref(unified: jax.Array, slot_masks: jax.Array,
+                         slot_lams: jax.Array, slot_sizes: jax.Array,
+                         slot_valid: jax.Array, slot_tasks: jax.Array,
+                         totals: jax.Array, a_acc: jax.Array,
+                         tau_acc: jax.Array, *, chunk: int = CHUNK_D):
+    """Phase-B chunk step, bool/fp32 layout twin of
+    :func:`matu_merge_chunk_packed_ref` (here both accumulators are
+    fp32 — the sign votes are small exact integers in fp32, matching
+    the monolithic bool round's accumulation dtype)."""
+    n, k, d = slot_masks.shape
+    m_rows = n * k
+    chunk, dp = _chunked(d, chunk)
+
+    ids = slot_tasks.reshape(m_rows)
+    vf = slot_valid.reshape(m_rows).astype(jnp.float32)
+    sizes = slot_sizes.reshape(m_rows).astype(jnp.float32) * vf
+    gam = sizes / jnp.maximum(totals[ids], 1e-12)
+    glv = gam * slot_lams.reshape(m_rows).astype(jnp.float32) * vf
+    glv_nk = glv.reshape(n, k)
+
+    u_p = unified.astype(jnp.float32)
+    m_p = slot_masks
+    if dp != d:
+        u_p = jnp.pad(u_p, ((0, 0), (0, dp - d)))
+        m_p = jnp.pad(m_p, ((0, 0), (0, 0), (0, dp - d)))
+
+    def fold(c, carry):
+        a_acc, tau_acc = carry
+        off = c * chunk
+        uc = lax.dynamic_slice_in_dim(u_p, off, chunk, axis=1)
+        mc = lax.dynamic_slice_in_dim(m_p, off, chunk, axis=2)
+        signs = jnp.where(mc, jnp.sign(uc)[:, None, :], 0.0)
+        a_blk = lax.dynamic_slice_in_dim(a_acc, off, chunk, axis=1)
+        a_blk = a_blk.at[ids].add(signs.reshape(m_rows, chunk))
+        a_acc = lax.dynamic_update_slice_in_dim(a_acc, a_blk, off, axis=1)
+        recon = jnp.where(mc, (glv_nk[:, :, None] * uc[:, None, :]), 0.0)
+        t_blk = lax.dynamic_slice_in_dim(tau_acc, off, chunk, axis=1)
+        t_blk = t_blk.at[ids].add(recon.reshape(m_rows, chunk))
+        tau_acc = lax.dynamic_update_slice_in_dim(tau_acc, t_blk, off, axis=1)
+        return a_acc, tau_acc
+
+    return lax.fori_loop(0, dp // chunk, fold, (a_acc, tau_acc))
+
+
+def matu_finish_packed_ref(a_acc: jax.Array, tau_acc: jax.Array,
+                           nt_acc: jax.Array, n_clients: int, *, n_tasks: int,
+                           d: int, rho: float, eps: float, kappa: int,
+                           cross_task: bool = True,
+                           uniform_cross: bool = False,
+                           chunk: int = CHUNK_D,
+                           axis_name=None, axis_sizes=(), d_norm: int = 0):
+    """Finish the chunked packed round from the accumulated partials:
+    Eq. 3 α/m̂ from the integer vote accumulator (same fp32 division as
+    the monolithic round), Eq. 5 popcount dots, Eq. 6 weights, Eq. 7
+    combine, and the λ numerator totals on the shard-invariant block
+    grid.  ``n_clients`` is the whole round's client count — it picks
+    the same ``alpha_dtype`` the monolithic round would.
+
+    Returns (task_vectors (T, d), tau_hats (T, d), alpha_num (T, d),
+    n_t (T,), similarity (T, T), num_t (T,) λ numerator totals).
+    """
+    chunk, dp = _chunked(d, chunk)
+    n_blk, blkc = dp // LAMBDA_BLOCK, chunk // LAMBDA_BLOCK
+    a_dt = alpha_dtype(n_clients)
+    d_norm = d_norm or d
+    n_t = nt_acc[:n_tasks]
+    held = n_t > 0
+    n_t_max = jnp.maximum(n_t, 1.0)
+
+    def pass1(c, carry):
+        tau_buf, anum_buf, dots = carry
+        off = c * chunk
+        a_num = lax.dynamic_slice_in_dim(
+            a_acc, off, chunk, axis=1)[:n_tasks].astype(jnp.float32)
+        tau_pre = lax.dynamic_slice_in_dim(tau_acc, off, chunk,
+                                           axis=1)[:n_tasks]
+        a_abs = jnp.abs(a_num)
+        alpha = a_abs / n_t_max[:, None]
+        m_hat = jnp.where(alpha >= rho, 1.0, alpha)
+        tau = tau_pre * m_hat
+        pos_t, nz_t = bitpack.sign_planes(tau)
+        dots = dots + bitpack.packed_sign_dots(pos_t, nz_t)
+        tau_buf = jax.lax.dynamic_update_slice_in_dim(tau_buf, tau, off,
+                                                      axis=1)
+        anum_buf = jax.lax.dynamic_update_slice_in_dim(
+            anum_buf, a_abs.astype(a_dt), off, axis=1)
+        return tau_buf, anum_buf, dots
+
+    tau_hats, anum_buf, dots = jax.lax.fori_loop(
+        0, dp // chunk, pass1,
+        (jnp.zeros((n_tasks, dp), jnp.float32),
+         jnp.zeros((n_tasks, dp), a_dt),
+         jnp.zeros((n_tasks, n_tasks), jnp.int32)))
+
+    if axis_name is not None:
+        dots = lax.psum(dots, axis_name)
+
+    heldf = held.astype(jnp.float32)
+    sim = 0.5 * (dots.astype(jnp.float32) / d_norm + 1.0) \
+        * heldf[None, :] * heldf[:, None]
+    weights = cross_weights_ref(sim, held, eps=eps, kappa=kappa,
+                                cross_task=cross_task,
+                                uniform_cross=uniform_cross)
+    total_w = jnp.sum(weights, axis=1, keepdims=True)
+    norm_w = weights / jnp.maximum(total_w, 1e-12)
+    has = (total_w > 0).astype(jnp.float32)
+    c1 = (1.0 / (1.0 + has))
+    c2 = (has / (1.0 + has))
+
+    def pass2(c, carry):
+        tv_buf, num_p = carry
+        off = c * chunk
+        tau = jax.lax.dynamic_slice_in_dim(tau_hats, off, chunk, axis=1)
+        anum = jax.lax.dynamic_slice_in_dim(anum_buf, off, chunk, axis=1)
+        alpha = anum.astype(jnp.float32) / n_t_max[:, None]
+        m_hat = jnp.where(alpha >= rho, 1.0, alpha)
+        tv = c1 * tau + c2 * (m_hat * (norm_w @ tau))
+        num_p = jax.lax.dynamic_update_slice_in_dim(
+            num_p, _block_partials(jnp.abs(tv)), c * blkc, axis=1)
+        tv_buf = jax.lax.dynamic_update_slice_in_dim(tv_buf, tv, off, axis=1)
+        return tv_buf, num_p
+
+    tv_buf, num_p = jax.lax.fori_loop(
+        0, dp // chunk, pass2,
+        (jnp.zeros((n_tasks, dp), jnp.float32),
+         jnp.zeros((n_tasks, n_blk), jnp.float32)))
+    num_t, = _lam_totals((num_p,), axis_name, axis_sizes)
+    return (tv_buf[:, :d], tau_hats[:, :d], anum_buf[:, :d], n_t, sim, num_t)
+
+
+def matu_finish_ref(a_acc: jax.Array, tau_acc: jax.Array, nt_acc: jax.Array,
+                    *, n_tasks: int, d: int, rho: float, eps: float,
+                    kappa: int, cross_task: bool = True,
+                    uniform_cross: bool = False, chunk: int = CHUNK_D,
+                    axis_name=None, axis_sizes=(), d_norm: int = 0):
+    """Bool/fp32-layout finish of the chunked round — same structure as
+    :func:`matu_finish_packed_ref` but m̂ is buffered dense and the
+    Eq. 5 dots use the fp32 sign matmul, matching the monolithic bool
+    round op for op.  Returns (task_vectors, tau_hats, m_hats (T, d),
+    n_t, similarity, num_t)."""
+    chunk, dp = _chunked(d, chunk)
+    n_blk, blkc = dp // LAMBDA_BLOCK, chunk // LAMBDA_BLOCK
+    d_norm = d_norm or d
+    n_t = nt_acc[:n_tasks]
+    held = n_t > 0
+
+    def pass1(c, carry):
+        tau_buf, mhat_buf, dots = carry
+        off = c * chunk
+        a_num = lax.dynamic_slice_in_dim(a_acc, off, chunk, axis=1)[:n_tasks]
+        tau_pre = lax.dynamic_slice_in_dim(tau_acc, off, chunk,
+                                           axis=1)[:n_tasks]
+        alpha = jnp.abs(a_num) / jnp.maximum(n_t, 1.0)[:, None]
+        m_hat = jnp.where(alpha >= rho, 1.0, alpha)
+        tau = tau_pre * m_hat
+        s = jnp.sign(tau)
+        dots = dots + s @ s.T
+        tau_buf = jax.lax.dynamic_update_slice_in_dim(tau_buf, tau, off,
+                                                      axis=1)
+        mhat_buf = jax.lax.dynamic_update_slice_in_dim(mhat_buf, m_hat, off,
+                                                       axis=1)
+        return tau_buf, mhat_buf, dots
+
+    tau_hats, m_hats, dots = jax.lax.fori_loop(
+        0, dp // chunk, pass1,
+        (jnp.zeros((n_tasks, dp), jnp.float32),
+         jnp.zeros((n_tasks, dp), jnp.float32),
+         jnp.zeros((n_tasks, n_tasks), jnp.float32)))
+
+    if axis_name is not None:
+        dots = lax.psum(dots, axis_name)     # integer-valued: exact
+
+    heldf = held.astype(jnp.float32)
+    sim = 0.5 * (dots / d_norm + 1.0) * heldf[None, :] * heldf[:, None]
+    weights = cross_weights_ref(sim, held, eps=eps, kappa=kappa,
+                                cross_task=cross_task,
+                                uniform_cross=uniform_cross)
+    total_w = jnp.sum(weights, axis=1, keepdims=True)
+    norm_w = weights / jnp.maximum(total_w, 1e-12)
+    has = (total_w > 0).astype(jnp.float32)
+    c1 = (1.0 / (1.0 + has))
+    c2 = (has / (1.0 + has))
+
+    def pass2(c, carry):
+        tv_buf, num_p = carry
+        off = c * chunk
+        tau = jax.lax.dynamic_slice_in_dim(tau_hats, off, chunk, axis=1)
+        m_hat = jax.lax.dynamic_slice_in_dim(m_hats, off, chunk, axis=1)
+        tv = c1 * tau + c2 * (m_hat * (norm_w @ tau))
+        num_p = jax.lax.dynamic_update_slice_in_dim(
+            num_p, _block_partials(jnp.abs(tv)), c * blkc, axis=1)
+        tv_buf = jax.lax.dynamic_update_slice_in_dim(tv_buf, tv, off, axis=1)
+        return tv_buf, num_p
+
+    tv_buf, num_p = jax.lax.fori_loop(
+        0, dp // chunk, pass2,
+        (jnp.zeros((n_tasks, dp), jnp.float32),
+         jnp.zeros((n_tasks, n_blk), jnp.float32)))
+    num_t, = _lam_totals((num_p,), axis_name, axis_sizes)
+    return (tv_buf[:, :d], tau_hats[:, :d], m_hats[:, :d], n_t, sim, num_t)
+
+
+def matu_downlink_chunk_packed_ref(task_vectors: jax.Array,
+                                   slot_tasks: jax.Array, num_t: jax.Array,
+                                   *, d: int, chunk: int = CHUNK_D,
+                                   axis_name=None, axis_sizes=()):
+    """Phase-C chunk step, wire layout: downlink re-unification of one
+    client chunk from the finished task vectors — the monolithic packed
+    pass 2's per-slot sweep, restricted to this chunk's rows (each slot
+    row lives in exactly one chunk, so per-row results are trivially
+    chunk-invariant; the λ denominator rides the same shard-invariant
+    block tree, one psum per chunk when sharded).  Invalid slots gather
+    the appended all-zero sentinel row exactly as the monolithic round
+    does.  Returns (down_unified (C, d) bf16, down_mask_words
+    (C, K, ceil(d/32)), down_num (C, K), down_den (C, K))."""
+    n, k = slot_tasks.shape
+    m_rows = n * k
+    chunk, dp = _chunked(d, chunk)
+    dwc, dwp = chunk // 32, dp // 32
+    n_blk, blkc = dp // LAMBDA_BLOCK, chunk // LAMBDA_BLOCK
+    ids = slot_tasks.reshape(m_rows)
+    tv_p = task_vectors
+    if dp != d:
+        tv_p = jnp.pad(tv_p, ((0, 0), (0, dp - d)))
+
+    def step(c, carry):
+        uni_buf, dmask_buf, den_p = carry
+        off = c * chunk
+        tv = lax.dynamic_slice_in_dim(tv_p, off, chunk, axis=1)
+        tv_ext = jnp.concatenate([tv, jnp.zeros((1, chunk), jnp.float32)], 0)
+        x = jnp.take(tv_ext, ids, axis=0).reshape(n, k, chunk)
+        sigma = jnp.sign(jnp.sum(x, axis=1))                   # (C, dc)
+        posm = sigma > 0
+        negm = sigma < 0
+        als = []
+        mu = jnp.zeros((n, chunk), jnp.float32)
+        for kk in range(k):
+            x_k = x[:, kk, :]                                  # (C, dc)
+            al_k = ((x_k > 0) & posm) | ((x_k < 0) & negm)
+            mu = jnp.maximum(mu, jnp.where(al_k, jnp.abs(x_k), 0.0))
+            als.append(al_k)
+        tau_n = sigma * mu
+        mupos = mu[:, None, :] > 0
+        dmask = jnp.stack(als, axis=1) & mupos     # zero slots: never set
+        den_c = _block_partials(jnp.where(dmask, mu[:, None, :], 0.0))
+        uni_buf = jax.lax.dynamic_update_slice_in_dim(uni_buf, tau_n, off,
+                                                      axis=1)
+        dmask_buf = jax.lax.dynamic_update_slice_in_dim(
+            dmask_buf, bitpack.pack_bits(dmask), c * dwc, axis=2)
+        den_p = jax.lax.dynamic_update_slice_in_dim(den_p, den_c, c * blkc,
+                                                    axis=2)
+        return uni_buf, dmask_buf, den_p
+
+    uni_buf, dmask_buf, den_p = jax.lax.fori_loop(
+        0, dp // chunk, step,
+        (jnp.zeros((n, dp), jnp.float32),
+         jnp.zeros((n, k, dwp), jnp.uint32),
+         jnp.zeros((n, k, n_blk), jnp.float32)))
+    den, = _lam_totals((den_p,), axis_name, axis_sizes)
+    num = jnp.concatenate([num_t, jnp.zeros((1,),
+                                            jnp.float32)])[ids].reshape(n, k)
+    dw = bitpack.packed_width(d)
+    return (uni_buf[:, :d].astype(jnp.bfloat16), dmask_buf[:, :, :dw],
+            num, den)
+
+
+def matu_downlink_chunk_ref(task_vectors: jax.Array, slot_valid: jax.Array,
+                            slot_tasks: jax.Array, num_t: jax.Array, *,
+                            n_tasks: int, chunk: int = CHUNK_D,
+                            axis_name=None, axis_sizes=()):
+    """Phase-C chunk step, bool/fp32 layout twin of
+    :func:`matu_downlink_chunk_packed_ref` (sentinel ids clamped for
+    the gather, validity handled by explicit vf multiplies — the
+    monolithic bool pass 2's conventions).  Returns (down_unified
+    (C, d) fp32, down_masks (C, K, d) bool, down_num, down_den)."""
+    n, k = slot_tasks.shape
+    m_rows = n * k
+    d = task_vectors.shape[-1]
+    chunk, dp = _chunked(d, chunk)
+    n_blk, blkc = dp // LAMBDA_BLOCK, chunk // LAMBDA_BLOCK
+    ids = slot_tasks.reshape(m_rows)
+    ids_c = jnp.minimum(ids, n_tasks - 1)       # clamp sentinel for gather
+    vf_nk = slot_valid.reshape(m_rows).astype(jnp.float32).reshape(n, k)
+    tv_p = task_vectors
+    if dp != d:
+        tv_p = jnp.pad(tv_p, ((0, 0), (0, dp - d)))
+
+    def step(c, carry):
+        uni_buf, dmask_buf, den_p = carry
+        off = c * chunk
+        tv = lax.dynamic_slice_in_dim(tv_p, off, chunk, axis=1)
+        x = jnp.take(tv, ids_c, axis=0).reshape(n, k, chunk)
+        xm = x * vf_nk[:, :, None]
+        sigma = jnp.sign(jnp.sum(xm, axis=1))                  # (C, dc)
+        mu = jnp.max(jax.nn.relu(xm * sigma[:, None, :]), axis=1)
+        tau_n = sigma * mu
+        dmask = (x * tau_n[:, None, :] > 0) & (vf_nk[:, :, None] > 0)
+        den_c = _block_partials(
+            jnp.where(dmask, jnp.abs(tau_n)[:, None, :], 0.0))
+        uni_buf = jax.lax.dynamic_update_slice_in_dim(uni_buf, tau_n, off,
+                                                      axis=1)
+        dmask_buf = jax.lax.dynamic_update_slice_in_dim(dmask_buf, dmask, off,
+                                                        axis=2)
+        den_p = jax.lax.dynamic_update_slice_in_dim(den_p, den_c, c * blkc,
+                                                    axis=2)
+        return uni_buf, dmask_buf, den_p
+
+    uni_buf, dmask_buf, den_p = jax.lax.fori_loop(
+        0, dp // chunk, step,
+        (jnp.zeros((n, dp), jnp.float32),
+         jnp.zeros((n, k, dp), bool),
+         jnp.zeros((n, k, n_blk), jnp.float32)))
+    den, = _lam_totals((den_p,), axis_name, axis_sizes)
+    num = num_t[ids_c].reshape(n, k) * vf_nk
+    return (uni_buf[:, :d], dmask_buf[:, :, :d], num, den)

@@ -59,6 +59,26 @@ def make_round_mesh(n_devices: Optional[int] = None):
     return _make_mesh((n,), ("data",), devices=devs[:n])
 
 
+def make_population_mesh(slots: int = 2, n_devices: Optional[int] = None):
+    """2-D ("slots", "data") mesh for the chunked population round: the
+    "slots" axis shards a chunk's client/slot rows (ingest + phase-C
+    downlink re-unification, see the engine's population-scale
+    contract) and "data" carries the taskvec d-sharding — composing
+    into the ROADMAP's (slots × taskvec) layout.  ``slots`` must divide
+    the device count; power-of-two counts keep the chunk row padding
+    aligned."""
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    if n > len(devs):
+        raise ValueError(f"make_population_mesh: {n} devices requested, "
+                         f"{len(devs)} available")
+    if slots < 1 or n % slots != 0:
+        raise ValueError(f"make_population_mesh: slots={slots} must divide "
+                         f"the device count {n}")
+    return _make_mesh((slots, n // slots), ("slots", "data"),
+                      devices=devs[:n])
+
+
 def arch_rules(cfg, mesh) -> Mapping[str, object]:
     """Per-arch logical-axis rule overrides (DESIGN.md §5).
 

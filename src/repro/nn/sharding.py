@@ -28,6 +28,10 @@ LogicalAxes = Optional[Tuple[Optional[str], ...]]
 DEFAULT_RULES: Tuple[Tuple[str, Any], ...] = (
     ("batch", ("pod", "data")),
     ("fed_clients", ("pod", "data")),
+    # chunked-round client/slot rows: present only on population meshes
+    # (make_population_mesh) — elsewhere the rule maps to no mesh axis
+    # and the slot rows stay replicated.
+    ("fed_slots", ("slots",)),
     ("act_seq", "model"),      # sequence-parallel residual stream
     # KV caches shard their sequence dim over whatever axes the batch
     # dim left unused — distributed flash-decode (softmax partials are
@@ -196,6 +200,33 @@ def taskvec_shards(mesh: Optional[Mesh] = None, *,
     if mesh is None:
         return 1
     axes = taskvec_axes(mesh, rules=rules)
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def slot_axes(mesh: Optional[Mesh] = None, *,
+              rules: Optional[Mapping[str, Any]] = None) -> Tuple[str, ...]:
+    """Mesh axes the ``fed_slots`` logical axis (the chunked round's
+    client/slot rows) shards over — empty on every mesh without a
+    "slots" axis, so the chunked round degrades to row-replicated."""
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return ()
+    rules = rules or _CTX.rules
+    mapped = rules.get("fed_slots")
+    if mapped is None:
+        return ()
+    if isinstance(mapped, str):
+        mapped = (mapped,)
+    return tuple(a for a in mapped if a in mesh.shape)
+
+
+def slot_shards(mesh: Optional[Mesh] = None, *,
+                rules: Optional[Mapping[str, Any]] = None) -> int:
+    """Number of client/slot-row shards the fed_slots rule yields."""
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return 1
+    axes = slot_axes(mesh, rules=rules)
     return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
 
 

@@ -23,6 +23,12 @@ reproduction of the pipelined rows in round_engine.json.
 ``faults`` kwarg (round_engine): rounds/sec of the buffered async
 simulator mode under 30% dropout + 2x-latency stragglers vs the
 synchronous barrier loop, emitted as the ``engine_async`` row.
+
+``--zoo`` adds the cross-architecture zoo round (bench_zoo): a mixed
+round over the reduced model zoo — one real backbone per family, each
+client flattening through its own TaskVectorSpace manifest — with the
+round wall-clock and measured wire bits merged into
+results/bench/round_engine.json under the ``zoo`` key.
 """
 
 from __future__ import annotations
@@ -67,6 +73,9 @@ def main() -> None:
                          "async vs sync under 30%% dropout + 2x-latency "
                          "stragglers) to benches that take a ``faults`` "
                          "kwarg")
+    ap.add_argument("--zoo", action="store_true",
+                    help="add the cross-architecture zoo round "
+                         "(bench_zoo) to the bench list")
     args = ap.parse_args()
 
     if args.devices > 1:
@@ -77,7 +86,8 @@ def main() -> None:
             f"--xla_force_host_platform_device_count={args.devices} "
             + os.environ.get("XLA_FLAGS", ""))
 
-    benches = [b for b in BENCHES
+    all_benches = BENCHES + (["bench_zoo"] if args.zoo else [])
+    benches = [b for b in all_benches
                if args.only in (None, b, b.removeprefix("bench_"))]
     print("name,us_per_call,derived")
     failed = []

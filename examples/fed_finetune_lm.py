@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt.checkpoint import save
-from repro.common.tree import tree_flatten_vector, tree_unflatten_vector
+from repro.common.tree import TaskVectorSpace
 from repro.configs.base import SHAPES, load_arch
 from repro.core.client import ClientUpload
 from repro.core.server import MaTUServer, MaTUServerConfig
@@ -60,8 +60,12 @@ def main():
     key = jax.random.PRNGKey(0)
     params = model.init(key)
     lora0 = model.lora_init(jax.random.PRNGKey(1))
-    d = int(tree_flatten_vector(lora0).shape[0])
-    print(f"model: reduced qwen2 family, LoRA d = {d}")
+    # the flat d-axis is DEFINED by the layout manifest; its fingerprint
+    # is what client and server compare before a round
+    space = TaskVectorSpace.from_tree(lora0)
+    d = space.d
+    print(f"model: reduced qwen2 family, LoRA d = {d}, "
+          f"layout {space.fingerprint}")
 
     n_tasks = 3
     client_tasks = [[0], [1], [2], [0, 2]]
@@ -72,9 +76,11 @@ def main():
     downlinks = {}
 
     def local_finetune(tv_flat, task, rng):
-        """θ_p ⊕ τ -> E local steps -> new τ (flat)."""
+        """θ_p ⊕ τ -> E local steps -> new τ (flat).  The flat vector
+        crosses the wire edge through the layout manifest: unflatten
+        once on entry, flatten once on return."""
         lora = jax.tree_util.tree_map(
-            jnp.add, lora0, tree_unflatten_vector(tv_flat, lora0))
+            jnp.add, lora0, space.unflatten(tv_flat))
         state = opt.init(lora)
         loss = None
         for s in range(args.local_steps):
@@ -83,7 +89,7 @@ def main():
             lora, state, m = train_step(params, lora, state, batch)
             loss = float(m["loss"])
         delta = jax.tree_util.tree_map(jnp.subtract, lora, lora0)
-        return tree_flatten_vector(delta), loss
+        return space.flatten(delta), loss
 
     rng = jax.random.PRNGKey(42)
     for r in range(args.rounds):
@@ -101,8 +107,10 @@ def main():
                 tvs.append(tv)
                 losses.append(loss)
             unified, masks, lams = unify_with_modulators(jnp.stack(tvs))
-            uploads.append(ClientUpload(cid, tasks, unified, masks, lams,
-                                        [args.batch * args.seq] * len(tasks)))
+            uploads.append(ClientUpload(
+                cid, tasks, unified, masks, lams,
+                [args.batch * args.seq] * len(tasks),
+                fingerprint=space.fingerprint))
         downlinks.update(server.round(uploads))
         bits = sum(u.uplink_bits() for u in uploads)
         print(f"round {r+1}: mean local loss {np.mean(losses):.4f}  "

@@ -5,11 +5,24 @@ defined over the *flattened* d-dimensional vector. These helpers move
 between the two representations deterministically (leaves in
 ``jax.tree_util`` canonical order) so client and server always agree on
 the layout of the unified task vector.
+
+:class:`TaskVectorSpace` is the explicit form of that agreement: a
+deterministic layout manifest (leaf path, shape, per-leaf dtype, flat
+offset) mapping any LoRA-targeted parameter pytree onto the d-axis the
+round engine operates on, plus a serializable fingerprint so client and
+server can verify they are talking about the same layout *before* a
+round aggregates anything.  The legacy ``tree_flatten_vector`` /
+``tree_unflatten_vector`` pair stays as the unchecked fast path — a
+``TaskVectorSpace`` built from a template produces byte-identical flat
+vectors (same canonical leaf order, same raveling).
 """
 
 from __future__ import annotations
 
-from typing import Any
+import hashlib
+import json
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -73,3 +86,229 @@ def tree_norm(a: PyTree) -> jax.Array:
 
 def tree_cast(tree: PyTree, dtype) -> PyTree:
     return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)
+
+
+# ----------------------------------------------------------------------
+# TaskVectorSpace: the explicit flat-layout contract
+# ----------------------------------------------------------------------
+
+
+class TaskVectorLayoutError(ValueError):
+    """Client/server disagree on the task-vector layout (manifest
+    fingerprint mismatch, or a tree that doesn't fit the manifest).
+    Raised *before* any aggregation touches the offending vector."""
+
+
+def _render_path(key_path) -> str:
+    """Stable, human-readable path string for a tree_util key path.
+
+    Dict keys render as their key, sequence entries as their index —
+    ``units/blk0/mixer/wq/a``.  The rendering is the manifest identity,
+    so it must stay deterministic across processes."""
+    parts = []
+    for k in key_path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:  # pragma: no cover - future key kinds
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+@dataclass(frozen=True)
+class LeafSpec:
+    """One manifest row: where a model-space leaf lives on the d-axis."""
+
+    path: str
+    shape: Tuple[int, ...]
+    dtype: str
+    offset: int
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+class TaskVectorSpace:
+    """Deterministic layout manifest mapping a LoRA parameter pytree to
+    the flat d-axis.
+
+    Layout contract
+    ---------------
+    * Leaves are enumerated in jax's canonical tree order (the same
+      order :func:`tree_flatten_vector` uses), each raveled C-order and
+      placed at a contiguous ``[offset, offset + size)`` slice of the
+      flat vector; ``d`` is the total.
+    * The flat wire dtype is ``dtype`` (fp32 by default); per-leaf model
+      dtypes are recorded in the manifest and restored on
+      :meth:`unflatten`.
+    * ``fingerprint`` is a content hash of the manifest (paths, shapes,
+      dtypes, offsets, d).  Two processes that agree on the fingerprint
+      are guaranteed to agree on the meaning of every coordinate of the
+      flat vector; disagreement must abort the round — see
+      :meth:`require_compatible`.
+
+    A space built with :meth:`from_tree` keeps the template's treedef
+    and supports :meth:`flatten`/:meth:`unflatten`; a space rebuilt via
+    :meth:`from_json` carries the manifest only (enough to verify
+    fingerprints and describe the layout), and rebuilds a nested-dict
+    template from the paths for structure-free use.
+    """
+
+    def __init__(self, leaves: Tuple[LeafSpec, ...], dtype=jnp.float32,
+                 treedef=None):
+        self.leaves = tuple(leaves)
+        self.dtype = jnp.dtype(dtype)
+        self._treedef = treedef
+        self.d = int(sum(l.size for l in self.leaves))
+        # offsets must tile [0, d) contiguously in order
+        off = 0
+        for leaf in self.leaves:
+            if leaf.offset != off:
+                raise TaskVectorLayoutError(
+                    f"manifest offset for {leaf.path!r} is {leaf.offset}, "
+                    f"expected {off} (manifest rows must tile the d-axis)")
+            off += leaf.size
+
+    # -- construction ---------------------------------------------------
+    @classmethod
+    def from_tree(cls, tree: PyTree, dtype=jnp.float32) -> "TaskVectorSpace":
+        """Build the manifest from a template pytree (e.g. the model's
+        ``lora_init`` output).  Leaf order is canonical tree order."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        specs, off = [], 0
+        for key_path, leaf in flat:
+            spec = LeafSpec(path=_render_path(key_path),
+                            shape=tuple(int(s) for s in leaf.shape),
+                            dtype=str(jnp.dtype(leaf.dtype)),
+                            offset=off)
+            specs.append(spec)
+            off += spec.size
+        return cls(tuple(specs), dtype=dtype, treedef=treedef)
+
+    # -- identity -------------------------------------------------------
+    def manifest_text(self) -> str:
+        """Canonical text form of the manifest (the fingerprint input)."""
+        lines = [f"{l.path} shape={l.shape} dtype={l.dtype} offset={l.offset}"
+                 for l in self.leaves]
+        lines.append(f"d={self.d} wire_dtype={self.dtype.name}")
+        return "\n".join(lines)
+
+    @property
+    def fingerprint(self) -> str:
+        return hashlib.sha256(self.manifest_text().encode()).hexdigest()[:16]
+
+    def require_compatible(self, other, context: str = "") -> None:
+        """Abort-before-aggregate check.  ``other`` is a fingerprint
+        string or another :class:`TaskVectorSpace`; raises
+        :class:`TaskVectorLayoutError` on mismatch."""
+        theirs = other.fingerprint if isinstance(other, TaskVectorSpace) else str(other)
+        if theirs != self.fingerprint:
+            where = f" ({context})" if context else ""
+            raise TaskVectorLayoutError(
+                f"task-vector layout mismatch{where}: local manifest "
+                f"{self.fingerprint} != peer {theirs}; refusing to "
+                f"aggregate vectors whose coordinates may not align")
+
+    # -- flat <-> tree --------------------------------------------------
+    def template(self) -> PyTree:
+        """Zeros pytree in the manifest's model space."""
+        leaves = [jnp.zeros(l.shape, dtype=l.dtype) for l in self.leaves]
+        if self._treedef is not None:
+            return jax.tree_util.tree_unflatten(self._treedef, leaves)
+        root: dict = {}
+        for spec, leaf in zip(self.leaves, leaves):
+            node = root
+            parts = spec.path.split("/") if spec.path else [""]
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = leaf
+        return root
+
+    def _check_tree(self, tree: PyTree) -> list:
+        flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+        if len(flat) != len(self.leaves):
+            raise TaskVectorLayoutError(
+                f"tree has {len(flat)} leaves, manifest has "
+                f"{len(self.leaves)}")
+        leaves = []
+        for (key_path, leaf), spec in zip(flat, self.leaves):
+            path = _render_path(key_path)
+            if path != spec.path or tuple(leaf.shape) != spec.shape:
+                raise TaskVectorLayoutError(
+                    f"leaf {path!r} {tuple(leaf.shape)} does not match "
+                    f"manifest row {spec.path!r} {spec.shape}")
+            leaves.append(leaf)
+        return leaves
+
+    def flatten(self, tree: PyTree) -> jax.Array:
+        """Model-space pytree -> flat (d,) wire vector.  Validates the
+        tree against the manifest (path + shape per leaf)."""
+        leaves = self._check_tree(tree)
+        if not leaves:
+            return jnp.zeros((0,), dtype=self.dtype)
+        return jnp.concatenate([jnp.ravel(x).astype(self.dtype) for x in leaves])
+
+    def unflatten(self, vector: jax.Array) -> PyTree:
+        """Flat (>= d,) wire vector -> model-space pytree (extra
+        zero-pad coordinates past ``d`` are ignored)."""
+        if int(vector.shape[0]) < self.d:
+            raise TaskVectorLayoutError(
+                f"vector has {int(vector.shape[0])} coords, manifest "
+                f"needs d={self.d}")
+        pieces = [jnp.reshape(vector[l.offset:l.offset + l.size],
+                              l.shape).astype(l.dtype) for l in self.leaves]
+        if self._treedef is not None:
+            return jax.tree_util.tree_unflatten(self._treedef, pieces)
+        out = self.template()
+        flat_paths = [l.path for l in self.leaves]
+        for path, piece in zip(flat_paths, pieces):
+            node = out
+            parts = path.split("/") if path else [""]
+            for p in parts[:-1]:
+                node = node[p]
+            node[parts[-1]] = piece
+        return out
+
+    # -- serialization --------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({
+            "version": 1,
+            "wire_dtype": self.dtype.name,
+            "d": self.d,
+            "fingerprint": self.fingerprint,
+            "leaves": [{"path": l.path, "shape": list(l.shape),
+                        "dtype": l.dtype, "offset": l.offset}
+                       for l in self.leaves],
+        }, indent=1)
+
+    @classmethod
+    def from_json(cls, text: str) -> "TaskVectorSpace":
+        obj = json.loads(text)
+        specs = tuple(LeafSpec(path=e["path"], shape=tuple(e["shape"]),
+                               dtype=e["dtype"], offset=int(e["offset"]))
+                      for e in obj["leaves"])
+        space = cls(specs, dtype=jnp.dtype(obj["wire_dtype"]))
+        if obj.get("fingerprint") and obj["fingerprint"] != space.fingerprint:
+            raise TaskVectorLayoutError(
+                f"serialized fingerprint {obj['fingerprint']} does not "
+                f"match rebuilt manifest {space.fingerprint}")
+        return space
+
+    def __repr__(self) -> str:
+        return (f"TaskVectorSpace(d={self.d}, leaves={len(self.leaves)}, "
+                f"fingerprint={self.fingerprint})")
+
+
+def pad_vector(vector: jax.Array, d: int) -> jax.Array:
+    """Zero-pad a flat vector up to a common d (the engine's shared slot
+    width).  Identity when already that long."""
+    n = int(vector.shape[0])
+    if n == d:
+        return vector
+    if n > d:
+        raise TaskVectorLayoutError(f"vector ({n}) longer than target d ({d})")
+    return jnp.pad(vector, (0, d - n))

@@ -147,6 +147,78 @@ class ArchConfig:
         return build_model(self, shape)
 
 
+    # -- LoRA targeting rules -------------------------------------------------
+    def lora_targets(self) -> Tuple[str, ...]:
+        """Which matmuls get LoRA adapters in this family.
+
+        Returned as module-path patterns matched against the
+        ``TaskVectorSpace`` manifest leaf paths (each adapter leaf is
+        ``<pattern>/{a,b,alpha}``).  This is the declarative contract
+        the testbed verifies against the actual ``lora_init`` tree —
+        see :func:`check_lora_targets`."""
+        return lora_targets_for(self)
+
+    def check_lora_targets(self, leaf_paths) -> None:
+        """Verify a manifest's leaf paths against the family's
+        targeting rules: every declared target must appear, and no
+        adapter may live outside the declared targets.  Raises
+        ``ValueError`` naming the offending target/path."""
+        check_lora_targets(self.lora_targets(), leaf_paths,
+                           context=f"{self.name} ({self.family})")
+
+
+# Per-family adapter placements (the reduced zoo variants).  Attention
+# q/o projections and the FFN down-projection are the shared baseline;
+# MLA swaps wq for the wq_a low-rank factor, MoE adapts only the shared
+# (always-on) expert, SSM/hybrid adapt the recurrent in/out projections.
+_FAMILY_LORA_TARGETS: Dict[str, Tuple[str, ...]] = {
+    "dense":  ("mixer/wq", "mixer/wo", "ffn/down"),
+    "vlm":    ("mixer/wq", "mixer/wo", "ffn/down"),
+    "ssm":    ("mlstm/up", "mlstm/down", "slstm/wx", "slstm/ffn_down"),
+    "hybrid": ("mixer/attn/wq", "mixer/attn/wo",
+               "mixer/mamba/in_proj", "mixer/mamba/out_proj", "ffn/down"),
+    "audio":  ("encoder/attn/wq", "encoder/attn/wo", "encoder/mlp/down",
+               "decoder/self_attn/wq", "decoder/self_attn/wo",
+               "decoder/cross_attn/wq", "decoder/cross_attn/wo",
+               "decoder/mlp/down"),
+    # vit is a bespoke ViTConfig (not ArchConfig) but shares the rule table
+    "vit":    ("attn/wq", "attn/wo", "mlp/down"),
+}
+
+
+def lora_targets_for(cfg) -> Tuple[str, ...]:
+    """Family targeting rules for an :class:`ArchConfig` (or anything
+    with ``family`` and the moe/mla fields)."""
+    family = cfg.family
+    if family == "moe":
+        targets = ["mixer/wq_a" if getattr(cfg, "use_mla", False)
+                   else "mixer/wq", "mixer/wo"]
+        if getattr(cfg, "n_shared_experts", 0) > 0:
+            targets.append("ffn/shared/down")
+        return tuple(targets)
+    return _FAMILY_LORA_TARGETS[family]
+
+
+def check_lora_targets(targets: Tuple[str, ...], leaf_paths,
+                       context: str = "") -> None:
+    """Every target pattern must match ≥1 adapter leaf and every leaf
+    must belong to a declared target (leaves are ``.../{a,b,alpha}``)."""
+    where = f" [{context}]" if context else ""
+    modules = set()
+    for path in leaf_paths:
+        mod = path.rsplit("/", 1)[0]
+        if not any(mod == t or mod.endswith("/" + t) for t in targets):
+            raise ValueError(
+                f"LoRA adapter at {path!r} is outside the declared "
+                f"targets {targets}{where}")
+        modules.add(mod)
+    for t in targets:
+        if not any(m == t or m.endswith("/" + t) for m in modules):
+            raise ValueError(
+                f"declared LoRA target {t!r} has no adapter in the "
+                f"manifest (modules: {sorted(modules)}){where}")
+
+
 def load_arch(name: str) -> ArchConfig:
     mod = importlib.import_module(
         f"repro.configs.{name.replace('-', '_').replace('.', '_')}")
@@ -165,6 +237,19 @@ ARCH_IDS = [
     "granite-moe-3b-a800m",
     "codeqwen1.5-7b",
 ]
+
+
+# Reduced model zoo for federated rounds: one representative arch per
+# family key.  ``fed.testbed.make_zoo_backbones`` builds an
+# ``ArchBackbone`` per entry (vit_b32 is a bespoke ViTConfig and is
+# special-cased there); a mixed round draws clients across families.
+ZOO_FAMILIES: Dict[str, str] = {
+    "lm": "qwen2-0.5b",             # dense decoder LM
+    "encdec": "whisper-large-v3",   # audio encoder-decoder
+    "vit": "vit_b32",               # vision transformer
+    "ssm": "xlstm-1.3b",            # recurrent xLSTM stack
+    "moe": "granite-moe-3b-a800m",  # sparse mixture-of-experts
+}
 
 
 # ---------------------------------------------------------------------------

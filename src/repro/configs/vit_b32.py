@@ -18,6 +18,7 @@ class ViTConfig:
     n_heads: int = 12
     d_ff: int = 3072
     lora_rank: int = 16
+    family: str = "vit"          # LoRA targeting rules key (configs.base)
 
 
 CONFIG = ViTConfig()

@@ -83,6 +83,10 @@ class ClientUpload:
     masks: jax.Array            # (k, d) bool | (k, ceil(d/32)) uint32 | uint8 stream
     lams: jax.Array             # (k,)
     data_sizes: List[int]
+    # TaskVectorSpace manifest fingerprint of the layout the vector was
+    # flattened through (None for legacy homogeneous rounds); lets the
+    # server verify layout agreement before aggregating
+    fingerprint: Optional[str] = None
     _dense: Optional[jax.Array] = field(default=None, repr=False,
                                         compare=False)
 
@@ -155,19 +159,44 @@ class ClientDownlink:
 
 class MaTUClient:
     """One federated client; ``trainer(task_id, tv_init, rng) -> tv_new``
-    runs the local fine-tune in flat task-vector space."""
+    runs the local fine-tune in flat task-vector space.
+
+    ``space`` (optional): the client backbone's
+    :class:`~repro.common.tree.TaskVectorSpace` layout manifest.  When
+    given, ``d`` may be omitted (it defaults to ``space.d``) and every
+    upload carries ``space.fingerprint`` so the server can verify
+    layout agreement before aggregating; :meth:`verify_layout` is the
+    client-side half of the same handshake (check the server's
+    advertised fingerprint before training against its downlink)."""
 
     def __init__(self, client_id: int, task_ids: List[int],
-                 data_sizes: List[int], d: int,
-                 trainer: Callable[[int, jax.Array, jax.Array], jax.Array],
-                 code_masks: bool = False):
+                 data_sizes: List[int], d: Optional[int] = None,
+                 trainer: Callable[[int, jax.Array, jax.Array], jax.Array] = None,
+                 code_masks: bool = False, space=None):
+        if d is None:
+            if space is None:
+                raise ValueError("MaTUClient needs d or a TaskVectorSpace")
+            d = space.d
         self.client_id = client_id
         self.task_ids = list(task_ids)
         self.data_sizes = list(data_sizes)
         self.d = d
         self.trainer = trainer
         self.code_masks = code_masks
+        self.space = space
         self.state: Optional[ClientDownlink] = None
+
+    @property
+    def fingerprint(self) -> Optional[str]:
+        return self.space.fingerprint if self.space is not None else None
+
+    def verify_layout(self, server_fingerprint: str) -> None:
+        """Abort-before-train check against the server's advertised
+        layout fingerprint (raises
+        :class:`~repro.common.tree.TaskVectorLayoutError`)."""
+        if self.space is not None:
+            self.space.require_compatible(server_fingerprint,
+                                          context=f"client {self.client_id}")
 
     def task_vector_init(self, task_index: int) -> jax.Array:
         """Starting τ for a local task from the current downlink."""
@@ -193,9 +222,11 @@ class MaTUClient:
                                       self.d)
             return ClientUpload(self.client_id, self.task_ids,
                                 unified.astype(jnp.bfloat16),
-                                jnp.asarray(stream), lams, self.data_sizes)
+                                jnp.asarray(stream), lams, self.data_sizes,
+                                fingerprint=self.fingerprint)
         return ClientUpload(self.client_id, self.task_ids, unified,
-                            masks, lams, self.data_sizes)
+                            masks, lams, self.data_sizes,
+                            fingerprint=self.fingerprint)
 
     def receive(self, downlink: ClientDownlink) -> None:
         self.state = downlink

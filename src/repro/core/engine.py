@@ -68,6 +68,25 @@ simulated:
 * λ / sizes stay fp32 scalars (k per client, 32 bits each on the
   paper's accounting).
 
+Task-vector layout contract
+---------------------------
+The engine never sees a model: the d-axis it merges coordinate-by-
+coordinate is DEFINED upstream by each backbone's
+:class:`~repro.common.tree.TaskVectorSpace` manifest (LoRA delta
+leaves in canonical tree order, each raveled C-order into a contiguous
+``[offset, offset + size)`` slice).  That makes layout agreement a
+precondition, not a property the engine can check numerically — so it
+is enforced at the edges: the manifest ``fingerprint`` rides every
+upload, and the strategy layer refuses to aggregate
+(``TaskVectorLayoutError``) when a client's fingerprint disagrees with
+the server's expectation for any task it holds.  Mixed-architecture
+rounds zero-pad every client's vector to a common d that is a multiple
+of 256 coordinates (``8 × bitpack.WORD_BITS`` = one ``LAMBDA_BLOCK``),
+so shorter manifests end exactly on a packed-word AND λ-block
+boundary: pad coordinates are zero in every row, contribute nothing to
+any reduction, and the packed/bool parity guarantees above carry over
+to padded rounds unchanged.
+
 The bool/fp32 slot layout is retained behind ``pack_uploads(...,
 packed=False)`` as the A/B baseline and parity oracle
 (``benchmarks/bench_round_engine.py`` measures both).

@@ -1,4 +1,4 @@
-"""Client-side local fine-tuning in flat task-vector space.
+"""Client-side local fine-tuning.
 
 One jitted trainer handles all strategies:
 
@@ -7,6 +7,16 @@ One jitted trainer handles all strategies:
 * NTK-FedAvg:  trains the *linearised* model f(0) + J(0)·τ
   (Muhamed et al. 2024) — implemented with jax.jvp, not an
   approximation of the baseline but the actual mechanism.
+
+Backbones exposing a :class:`~repro.common.tree.TaskVectorSpace`
+(``space``) and a tree-level feature path (``features_tree``) train
+PYTREE-AWARE: the optimizer runs over the model-space LoRA delta pytree
+(so AdamW moments live in model space, shaped like the adapters they
+update) and the flat d-vector exists only at the wire edge — unflatten
+the downlinked τ once on entry, flatten the trained delta once on
+return.  The wire contract is unchanged either way:
+``train(tv0, head0, X, Y, rng) -> (tv, head, final_loss)`` over flat
+vectors of length ``backbone.d``.
 """
 
 from __future__ import annotations
@@ -17,13 +27,25 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.common.tree import tree_dot, tree_sub, tree_zeros_like
 from repro.optim import adamw
 
 
 def make_local_trainer(backbone, *, steps: int, batch_size: int, lr: float,
                        prox_mu: float = 0.0, linearize: bool = False):
     """Returns train(tv0, head0, X, Y, rng) -> (tv, head, final_loss)."""
+    space = getattr(backbone, "space", None)
+    if space is not None and hasattr(backbone, "features_tree"):
+        return _make_tree_trainer(backbone, space, steps=steps,
+                                  batch_size=batch_size, lr=lr,
+                                  prox_mu=prox_mu, linearize=linearize)
+    return _make_flat_trainer(backbone, steps=steps, batch_size=batch_size,
+                              lr=lr, prox_mu=prox_mu, linearize=linearize)
 
+
+def _make_flat_trainer(backbone, *, steps: int, batch_size: int, lr: float,
+                       prox_mu: float, linearize: bool):
+    """Legacy path: optimizer state in flat task-vector space."""
     feats = backbone.lin_features if linearize else backbone.features
     opt = adamw(lr)
 
@@ -55,6 +77,56 @@ def make_local_trainer(backbone, *, steps: int, batch_size: int, lr: float,
         keys = jax.random.split(rng, steps)
         (params, _), losses = jax.lax.scan(body, (params, state), keys)
         return params[0], params[1], losses[-1]
+
+    return train
+
+
+def _make_tree_trainer(backbone, space, *, steps: int, batch_size: int,
+                       lr: float, prox_mu: float, linearize: bool):
+    """Pytree-aware path: AdamW over the model-space LoRA delta pytree
+    (+ head); the flat vector appears only at the wire edge."""
+    opt = adamw(lr)
+
+    def feats(delta, xb):
+        if linearize:
+            zero = tree_zeros_like(delta)
+            f0, jvp_out = jax.jvp(
+                lambda dt: backbone.features_tree(dt, xb), (zero,), (delta,))
+            return f0 + jvp_out
+        return backbone.features_tree(delta, xb)
+
+    def loss_fn(delta, head, xb, yb, anchor):
+        f = feats(delta, xb)
+        logits = f @ head
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
+        ce = jnp.mean(lse - gold)
+        if prox_mu > 0.0:
+            diff = tree_sub(delta, anchor)
+            ce = ce + 0.5 * prox_mu * tree_dot(diff, diff)
+        return ce
+
+    @jax.jit
+    def train(tv0, head0, x, y, rng):
+        # wire edge: flat -> model space, once
+        delta0 = space.unflatten(tv0)
+        anchor = delta0
+        params = (delta0, head0)
+        state = opt.init(params)       # AdamW moments live in model space
+
+        def body(carry, key):
+            params, state = carry
+            idx = jax.random.randint(key, (batch_size,), 0, x.shape[0])
+            xb, yb = x[idx], y[idx]
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p[0], p[1], xb, yb, anchor))(params)
+            params, state = opt.update(grads, state, params)
+            return (params, state), loss
+
+        keys = jax.random.split(rng, steps)
+        (params, _), losses = jax.lax.scan(body, (params, state), keys)
+        # wire edge: model space -> flat, once
+        return space.flatten(params[0]), params[1], losses[-1]
 
     return train
 

@@ -67,6 +67,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.tree import TaskVectorLayoutError, pad_vector
 from repro.core.client import ClientUpload
 from repro.core.server import MaTUServer, MaTUServerConfig
 from repro.core.unify import unify_with_modulators
@@ -76,6 +77,7 @@ from repro.fed.local import make_head, make_local_trainer
 from repro.fed.strategies import RoundBatch, Strategy, Upload
 from repro.fed.systems import (AdmissionQueue, ClientSystems,
                                blank_fault_counters)
+from repro.fed.testbed import round_up_d
 
 
 @dataclass
@@ -181,11 +183,20 @@ class FedSimulator:
         event-clock trace — switches ``run`` to the async buffered mode
         (see "Async & fault model" in the module docstring).  Under
         ``ClientSystems.ideal`` the async run is bit-identical to
-        ``systems=None``."""
+        ``systems=None``.
+
+        ``backbone``: one backbone shared by every client (the
+        homogeneous path, unchanged), or a per-client mapping — a dict
+        ``{client_id: backbone}`` or list — so one round mixes
+        architectures.  Each client's delta flattens through its own
+        ``TaskVectorSpace`` manifest and is zero-padded to the round's
+        common d (the max over clients, rounded up to the 256-coord
+        word boundary); holders of the same task must share a manifest
+        fingerprint (checked here, and again by the strategy before
+        every aggregation) because their rows merge coordinate-wise."""
         self.cfg = cfg
         self.con = constellation
         self.split = split
-        self.backbone = backbone
         self.strategy = strategy
         self.mesh = mesh
         self.systems = systems
@@ -198,11 +209,60 @@ class FedSimulator:
             raise ValueError(f"systems models {systems.n_clients} clients, "
                              f"split has {self.n_clients}")
 
-        self.trainer = make_local_trainer(
-            backbone, steps=cfg.local_steps, batch_size=cfg.batch_size,
-            lr=cfg.lr,
-            prox_mu=cfg.prox_mu if strategy.needs_prox else 0.0,
-            linearize=strategy.needs_linearize)
+        # -- backbone resolution: homogeneous object vs per-client map ----
+        if isinstance(backbone, (list, tuple)):
+            backbone = dict(enumerate(backbone))
+        if isinstance(backbone, dict):
+            missing = set(range(self.n_clients)) - set(backbone)
+            if missing:
+                raise ValueError(f"per-client backbones missing clients "
+                                 f"{sorted(missing)}")
+            self.backbones: Optional[Dict[int, object]] = {
+                int(c): b for c, b in backbone.items()}
+            self.backbone = None
+            self.d = round_up_d(max(b.d for b in self.backbones.values()))
+        else:
+            self.backbones = None
+            self.backbone = backbone
+            self.d = backbone.d
+
+        # per-task layout agreement + the backbone evaluation uses: all
+        # holders of a task must flatten through the SAME manifest
+        self._task_backbone: Dict[int, object] = {}
+        if self.backbones is not None:
+            task_fps: Dict[int, str] = {}
+            for t in range(self.con.n_tasks):
+                holders = [c for c in range(self.n_clients)
+                           if t in split.tasks[c]]
+                if not holders:
+                    continue
+                bbs = [self.backbones[c] for c in holders]
+                fps = {b.fingerprint for b in bbs}
+                if len(fps) > 1:
+                    raise TaskVectorLayoutError(
+                        f"task {t} is held by clients with different "
+                        f"task-vector layouts {sorted(fps)}; holders of "
+                        f"one task must share a manifest")
+                if len({b.feat_out for b in bbs}) > 1:
+                    raise ValueError(
+                        f"task {t} holders disagree on feat_out; the "
+                        f"shared head needs one feature width")
+                self._task_backbone[t] = bbs[0]
+                task_fps[t] = bbs[0].fingerprint
+            strategy.use_layouts(task_fps)
+
+        # one jitted trainer per distinct backbone object
+        self._trainers: Dict[int, object] = {}
+        for bb in ([self.backbone] if self.backbones is None
+                   else self.backbones.values()):
+            if id(bb) not in self._trainers:
+                self._trainers[id(bb)] = make_local_trainer(
+                    bb, steps=cfg.local_steps, batch_size=cfg.batch_size,
+                    lr=cfg.lr,
+                    prox_mu=cfg.prox_mu if strategy.needs_prox else 0.0,
+                    linearize=strategy.needs_linearize)
+        self.trainer = (self._trainers[id(self.backbone)]
+                        if self.backbones is None else None)
 
         # pre-sample local datasets (fixed size -> single jit signature)
         self.local_data: Dict[tuple, tuple] = {}
@@ -213,20 +273,33 @@ class FedSimulator:
                 self.local_data[(c, t)] = sample_task_batch(
                     self.con.tasks[t], k, cfg.local_data, probs)
 
-        # global per-task heads (averaged among holders every round)
+        # global per-task heads (averaged among holders every round);
+        # sized for the task's holder backbone in mixed rounds
         self.rng, hk = jax.random.split(self.rng)
         self.heads: Dict[int, jax.Array] = {
-            t: make_head(jax.random.fold_in(hk, t), backbone.feat_out,
+            t: make_head(jax.random.fold_in(hk, t),
+                         self._backbone_for_task(t).feat_out,
                          self.con.n_classes)
             for t in range(self.con.n_tasks)
         }
         self._eval_sets = {t: eval_batch(self.con.tasks[t])
                            for t in range(self.con.n_tasks)}
 
+    def _backbone_for_task(self, task_id: int):
+        if self.backbones is None:
+            return self.backbone
+        if task_id in self._task_backbone:
+            return self._task_backbone[task_id]
+        return next(iter(self.backbones.values()))
+
+    def _backbone_for_client(self, c: int):
+        return self.backbone if self.backbones is None else self.backbones[c]
+
     # -- evaluation ---------------------------------------------------------
     def task_accuracy(self, task_id: int, tv: jax.Array) -> float:
         x, y = self._eval_sets[task_id]
-        logits = self.backbone.features(tv, x) @ self.heads[task_id]
+        bb = self._backbone_for_task(task_id)
+        logits = bb.features(tv[:bb.d], x) @ self.heads[task_id]
         return float(jnp.mean(jnp.argmax(logits, -1) == y))
 
     def evaluate(self) -> Dict[int, float]:
@@ -244,16 +317,23 @@ class FedSimulator:
         only — failure-invariant: another client's faults can never
         shift them (see module docstring)."""
         ck = jax.random.fold_in(jax.random.fold_in(train_base, c), r)
+        bb = self._backbone_for_client(c)
+        trainer = self._trainers[id(bb)]
         tvs, sizes, head_pairs = [], [], []
         for t in self.split.tasks[c]:
             tk = jax.random.fold_in(ck, t)
             x, y = self.local_data[(c, t)]
-            tv0 = self.strategy.task_init(c, t)
-            tv, head, _loss = self.trainer(tv0, self.heads[t], x, y, tk)
-            tvs.append(tv)
+            # wire edge: the strategy hands out the round's common-d
+            # vector; this client's manifest covers the [0, bb.d) prefix
+            tv0 = self.strategy.task_init(c, t)[:bb.d]
+            tv, head, _loss = trainer(tv0, self.heads[t], x, y, tk)
+            tvs.append(pad_vector(tv, self.d))
             sizes.append(self.split.data_sizes[(c, t)])
             head_pairs.append((t, head, sizes[-1]))
-        return (Upload(c, list(self.split.tasks[c]), jnp.stack(tvs), sizes),
+        fp = getattr(bb, "fingerprint", None) if self.backbones is not None \
+            else None
+        return (Upload(c, list(self.split.tasks[c]), jnp.stack(tvs), sizes,
+                       fingerprint=fp),
                 head_pairs)
 
     # -- main loop ------------------------------------------------------------

@@ -41,6 +41,12 @@ class Upload:
     task_ids: List[int]
     task_vectors: jax.Array     # (k, d) fine-tuned vectors, one per task
     data_sizes: List[int]
+    # TaskVectorSpace manifest fingerprint of the client's backbone —
+    # the layout the rows were flattened through (zero-padded past the
+    # manifest's own d up to the round's common d).  None for legacy
+    # homogeneous rounds; when the strategy has expected layouts
+    # installed (``use_layouts``) a mismatch aborts BEFORE aggregation.
+    fingerprint: Optional[str] = None
 
 
 @dataclass
@@ -120,9 +126,42 @@ class Strategy:
 
     def __init__(self, n_tasks: int, d: int):
         self.n_tasks, self.d = n_tasks, d
+        # task id -> expected TaskVectorSpace fingerprint (use_layouts)
+        self.expected_layouts: Optional[Dict[int, str]] = None
 
     def task_init(self, client_id: int, task_id: int) -> jax.Array:
         raise NotImplementedError
+
+    def use_layouts(self, task_fingerprints: Dict[int, str]) -> None:
+        """Install the server's expected per-task layout fingerprints.
+        Every subsequent round verifies each upload's manifest
+        fingerprint against the tasks it holds BEFORE aggregation —
+        see :meth:`verify_layouts`."""
+        self.expected_layouts = dict(task_fingerprints)
+
+    def verify_layouts(self, uploads: List[Upload]) -> None:
+        """Client/server layout agreement check (the abort-before-
+        aggregate half of the task-vector layout contract): raises
+        :class:`~repro.common.tree.TaskVectorLayoutError` when an
+        upload's manifest fingerprint disagrees with the server's
+        expectation for any task it holds.  No-op until
+        :meth:`use_layouts` installs expectations; uploads without a
+        fingerprint (legacy homogeneous rounds) pass."""
+        exp = self.expected_layouts
+        if not exp:
+            return
+        from repro.common.tree import TaskVectorLayoutError
+        for u in uploads:
+            fp = getattr(u, "fingerprint", None)
+            if fp is None:
+                continue
+            for t in u.task_ids:
+                want = exp.get(t)
+                if want is not None and want != fp:
+                    raise TaskVectorLayoutError(
+                        f"client {u.client_id} uploads task {t} flattened "
+                        f"through manifest {fp}, server expects {want}; "
+                        f"refusing to aggregate")
 
     def aggregate(self, uploads: List[Upload]) -> None:
         raise NotImplementedError
@@ -130,6 +169,7 @@ class Strategy:
     def aggregate_batch(self, batch: RoundBatch) -> None:
         """Server step from a pre-packed batch; the default unwraps to
         the ragged per-client path.  Batched strategies override."""
+        self.verify_layouts(batch.uploads)
         self.aggregate(batch.uploads)
 
     def use_mesh(self, mesh) -> None:
@@ -259,6 +299,7 @@ class MaTUStrategy(Strategy):
         round is left dispatched-but-undrained on return (downlinks
         materialise at first use); either way at most one round is ever
         in flight."""
+        self.verify_layouts(batch.uploads)
         if self.chunk_clients:
             self._aggregate_chunked(batch)
             return
@@ -485,6 +526,7 @@ class AsyncMaTUStrategy(MaTUStrategy):
         Returns the number of uploads actually aggregated (0 when every
         admitted upload was quarantined — the caller should treat that
         like a skipped round for head updates)."""
+        self.verify_layouts(batch.uploads)
         self._drain()
         inject = (systems is not None and systems.injects_corruption
                   and dispatch_rounds is not None)

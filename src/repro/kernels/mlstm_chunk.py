@@ -26,6 +26,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; accept
+# either spelling (same version-tolerance pattern as launch/mesh._make_mesh).
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
 
 def _mlstm_chunk_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, h_ref,
                         c_scr, n_scr, m_scr, *, chunk: int):
@@ -115,7 +120,7 @@ def mlstm_chunkwise_pallas(q, k, v, i_pre, f_pre, *, chunk: int = 64,
             pltpu.VMEM((dk,), jnp.float32),      # n carry
             pltpu.VMEM((1,), jnp.float32),       # m carry
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, i_pre, f_pre)

@@ -45,6 +45,13 @@ try:  # jax >= 0.6 exposes shard_map at top level
 except AttributeError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map
 
+# the "don't verify replication" kwarg was renamed check_rep -> check_vma
+import inspect as _inspect
+
+_SM_NOCHECK = ({"check_vma": False}
+               if "check_vma" in _inspect.signature(shard_map).parameters
+               else {"check_rep": False})
+
 
 def _round8(x: int) -> int:
     return max(8, ((x + 7) // 8) * 8)
@@ -282,6 +289,6 @@ class MoE(Module):
             mesh=mesh,
             in_specs=(P(), e_spec, x_spec),
             out_specs=(x_spec, P()),
-            check_vma=False,
+            **_SM_NOCHECK,
         )(params["router"]["w"], params["experts"], x)
         return y, aux

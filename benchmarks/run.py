@@ -29,6 +29,11 @@ round over the reduced model zoo — one real backbone per family, each
 client flattening through its own TaskVectorSpace manifest — with the
 round wall-clock and measured wire bits merged into
 results/bench/round_engine.json under the ``zoo`` key.
+
+``--serving`` adds the multi-tenant serving bench (bench_serving):
+requests/sec of the task-routed decode subsystem (dense-routed and
+fused) vs per-task-checkpoint swapping, plus the T=30 resident-bytes
+ratio, recorded in results/bench/serving.json.
 """
 
 from __future__ import annotations
@@ -76,6 +81,9 @@ def main() -> None:
     ap.add_argument("--zoo", action="store_true",
                     help="add the cross-architecture zoo round "
                          "(bench_zoo) to the bench list")
+    ap.add_argument("--serving", action="store_true",
+                    help="add the multi-tenant serving bench "
+                         "(bench_serving) to the bench list")
     args = ap.parse_args()
 
     if args.devices > 1:
@@ -86,7 +94,8 @@ def main() -> None:
             f"--xla_force_host_platform_device_count={args.devices} "
             + os.environ.get("XLA_FLAGS", ""))
 
-    all_benches = BENCHES + (["bench_zoo"] if args.zoo else [])
+    all_benches = (BENCHES + (["bench_zoo"] if args.zoo else [])
+                   + (["bench_serving"] if args.serving else []))
     benches = [b for b in all_benches
                if args.only in (None, b, b.removeprefix("bench_"))]
     print("name,us_per_call,derived")

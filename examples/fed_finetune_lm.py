@@ -117,9 +117,10 @@ def main():
               f"uplink {bits/8/2**20:.2f} MiB  "
               f"S(0,2)={float(server.last_similarity[0,2]):.2f}")
 
-    save("results/fed_lm_ckpt", {"task_vectors": server.last_task_vectors},
+    # results/ckpt/ is git-ignored: run artifacts never land in the tree
+    save("results/ckpt/fed_lm", {"task_vectors": server.last_task_vectors},
          {"rounds": args.rounds})
-    print("saved server task vectors -> results/fed_lm_ckpt.npz")
+    print("saved server task vectors -> results/ckpt/fed_lm.npz")
 
 
 if __name__ == "__main__":

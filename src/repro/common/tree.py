@@ -213,6 +213,19 @@ class TaskVectorSpace:
                 f"{self.fingerprint} != peer {theirs}; refusing to "
                 f"aggregate vectors whose coordinates may not align")
 
+    def by_path(self, path: str) -> LeafSpec:
+        """Manifest row for a leaf path (serving router lookup: a
+        consumer that slices one leaf's coordinates — or packed mask
+        bits — out of the flat d-axis needs the leaf's offset/shape
+        without walking the whole manifest)."""
+        if not hasattr(self, "_by_path"):
+            self._by_path = {l.path: l for l in self.leaves}
+        try:
+            return self._by_path[path]
+        except KeyError:
+            raise TaskVectorLayoutError(
+                f"no manifest row for leaf path {path!r}") from None
+
     # -- flat <-> tree --------------------------------------------------
     def template(self) -> PyTree:
         """Zeros pytree in the manifest's model space."""

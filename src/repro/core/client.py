@@ -119,6 +119,11 @@ class ClientDownlink:
     unified: jax.Array          # (d,) fp32 | bf16 (wire)
     masks: jax.Array            # (k, d) bool | (k, ceil(d/32)) uint32 | uint8 stream
     lams: jax.Array             # (k,)
+    # TaskVectorSpace manifest fingerprint of the layout the vector was
+    # flattened through (None for legacy rounds) — the serving
+    # ModulatorStore refuses to ingest a downlink whose fingerprint
+    # does not match its own manifest (same handshake as uploads)
+    fingerprint: Optional[str] = None
     _words: Optional[jax.Array] = field(default=None, repr=False,
                                         compare=False)
 

@@ -128,6 +128,43 @@ class MaTUServer:
         self.last_similarity = out.similarity
         self.last_task_vectors = out.task_vectors
 
+    def serving_downlink(self, *, packed: bool = True,
+                         code_masks: bool = False,
+                         fingerprint: Optional[str] = None
+                         ) -> ClientDownlink:
+        """Serving handoff: re-unify the LAST round's full task-vector
+        set into one all-tasks downlink for a
+        :class:`repro.serve.store.ModulatorStore` — row ``t`` of the
+        modulators is task id ``t`` (the store keys on position).
+
+        ``packed`` ships the wire layout (bf16 unified + bit-packed
+        uint32 mask words); ``code_masks`` entropy-codes the rows into
+        a Golomb-Rice byte stream instead.  ``fingerprint`` stamps the
+        layout manifest the task vectors were flattened through
+        (``TaskVectorSpace.fingerprint``) so the store can verify the
+        handoff before serving anything.
+        """
+        if self.last_task_vectors is None:
+            raise ValueError("serving_downlink needs a completed round "
+                             "(no task vectors recorded yet)")
+        tvs = self.last_task_vectors
+        unified, masks, lams = unify_with_modulators(tvs)
+        if code_masks:
+            import numpy as np
+            from repro.fed.compression import encode_mask_rows
+            from repro.kernels.bitpack import pack_bits_np
+            d = int(unified.shape[0])
+            stream = encode_mask_rows(pack_bits_np(np.asarray(masks)), d)
+            return ClientDownlink(unified.astype(jnp.bfloat16),
+                                  jnp.asarray(stream), lams,
+                                  fingerprint=fingerprint)
+        if packed:
+            from repro.kernels.bitpack import pack_bits
+            return ClientDownlink(unified.astype(jnp.bfloat16),
+                                  pack_bits(masks), lams,
+                                  fingerprint=fingerprint)
+        return ClientDownlink(unified, masks, lams, fingerprint=fingerprint)
+
     # ------------------------------------------------------------------
     # Legacy reference path: the original host-bound per-task loop.
     # Kept as the parity oracle for tests/test_round_engine.py and the

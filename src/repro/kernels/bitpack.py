@@ -147,6 +147,44 @@ def scatter_bits_np(positions: np.ndarray, n_bytes: int) -> np.ndarray:
     return np.packbits(bit_space, bitorder="little")
 
 
+def slice_bits(words: jax.Array, start: int, length: int) -> jax.Array:
+    """Re-aligned bit-range extract: bits ``[start, start + length)`` of
+    a packed row, returned as ``ceil(length/32)`` words whose bit 0 is
+    the bit at ``start`` (same LSB-first convention, zero tail bits).
+
+    This is how a consumer slices one manifest leaf's mask bits out of
+    a whole-d packed row WITHOUT unpacking to bool: each output word is
+    the OR of two shifted neighbour words.  ``words`` may carry leading
+    batch axes (the slice applies to the last axis); ``start``/``length``
+    are static ints.  Bit j of the result == bit ``start + j`` of the
+    input row, verified against the unpack→slice→pack oracle in
+    tests/test_serve_multitenant.py.
+    """
+    if length < 0 or start < 0:
+        raise ValueError(f"slice_bits needs start/length >= 0, got "
+                         f"({start}, {length})")
+    n_out = packed_width(length)
+    w0, sh = start // WORD_BITS, start % WORD_BITS
+    need = n_out + (1 if sh else 0)
+    avail = words.shape[-1] - w0
+    if avail < need:   # zero-pad so the shifted neighbour read is safe
+        pad = [(0, 0)] * (words.ndim - 1) + [(0, need - avail)]
+        words = jnp.pad(words, pad)
+    lo = words[..., w0:w0 + n_out]
+    if sh:
+        hi = words[..., w0 + 1:w0 + 1 + n_out]
+        out = (lo >> jnp.uint32(sh)) | (hi << jnp.uint32(WORD_BITS - sh))
+    else:
+        out = lo
+    # zero the tail bits past `length` of the last word (layout contract)
+    tail = length % WORD_BITS
+    if tail:
+        keep = jnp.uint32((1 << tail) - 1)
+        last = out[..., -1:] & keep
+        out = jnp.concatenate([out[..., :-1], last], axis=-1)
+    return out
+
+
 def sign_planes(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Pack ``sgn(x)`` over the last axis into (pos, nz) bit-planes:
     ``pos`` has bit j set iff x_j > 0, ``nz`` iff x_j != 0."""

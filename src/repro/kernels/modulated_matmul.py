@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: per-request modulated LoRA matmul for serving.
+
+The multi-tenant decode path applies each request's task modulator to
+the shared LoRA leaf at matmul time:
+
+    y_b = x_b @ (base + lam_b * m_b * tau)
+
+The reference route first materialises every request's effective
+weight in HBM (unpack the mask words to fp32, three elementwise passes
+over (B, K, N)) and only then runs the batched matmul.  This kernel
+streams one request per grid step: the packed uint32 words expand to
+{0, 1} lanes in VMEM (``bitpack.unpack_tile``), the λ-scale and the
+add onto the base leaf fuse into the same tile, and the MXU consumes
+the effective weight without it ever existing in HBM — applying a
+modulator costs no extra HBM pass beyond reading base/tau once per
+request.
+
+Layout: grid (B,); whole (S, K) / (K, N) blocks per step (LoRA leaves
+are small — K or N is the rank r, so a full leaf fits VMEM easily).
+Bit order: ``words[b]`` is the row-major (K, N) mask of request b in
+the repo's LSB-first uint32 layout (``repro.kernels.bitpack``);
+``K * N`` must be word-aligned (% 32 == 0) — the router only routes
+leaf pairs that qualify and falls back to the dense path otherwise.
+
+Bit-parity: ``(lam * bits) * tau`` with bits ∈ {0, 1} is IEEE-exact
+``lam * where(m, tau, 0)``, so the fused product matches the
+unpack-then-matmul oracle (``ref.modulated_matmul_ref``) bitwise; the
+dot contraction is the same shape in both (tested in
+tests/test_serve_multitenant.py, ref + pallas_interpret).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import bitpack
+
+
+def _modulated_matmul_kernel(x_ref, base_ref, tau_ref, words_ref, lam_ref,
+                             out_ref):
+    k, n = base_ref.shape
+    bits = bitpack.unpack_tile(words_ref[...], jnp.float32)  # (1, W*32)
+    m = bits.reshape(k, n)
+    w_eff = (base_ref[...].astype(jnp.float32)
+             + lam_ref[0, 0] * m * tau_ref[...].astype(jnp.float32))
+    x = x_ref[0].astype(jnp.float32)                          # (S, K)
+    out_ref[0] = jnp.dot(x, w_eff, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def modulated_matmul_pallas(x: jax.Array, base: jax.Array, tau: jax.Array,
+                            words: jax.Array, lam: jax.Array, *,
+                            interpret: bool = True) -> jax.Array:
+    """x (B, S, K); base/tau (K, N); words (B, ceil(K*N/32)) uint32;
+    lam (B,).  Returns (B, S, N) fp32 = x_b @ (base + lam_b·m_b·tau).
+
+    ``K * N`` must be a multiple of 32 (word-aligned leaf); the
+    dispatch layer enforces it.
+    """
+    b, s, k = x.shape
+    k2, n = base.shape
+    assert k == k2, (x.shape, base.shape)
+    out = pl.pallas_call(
+        _modulated_matmul_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, s, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, words.shape[-1]), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, n), jnp.float32),
+        interpret=interpret,
+    )(x, base, tau, words, lam.astype(jnp.float32).reshape(b, 1))
+    return out

@@ -37,6 +37,7 @@ from repro.kernels.fused_unify import (fused_unify_packed_pallas,
 from repro.kernels.masked_agg import (masked_agg_batched_packed_pallas,
                                       masked_agg_batched_pallas,
                                       masked_agg_pallas)
+from repro.kernels.modulated_matmul import modulated_matmul_pallas
 from repro.kernels.sign_sim import sign_sim_packed_pallas, sign_sim_pallas
 from repro.kernels.unify import unify_pallas
 
@@ -221,6 +222,32 @@ def cross_task_combine(tau_hats: jax.Array, m_hats: jax.Array,
     """Eq. 6 + Eq. 7: returns (task_vectors, tau_tildes)."""
     _norm(mode)
     return ref.cross_task_combine_ref(tau_hats, m_hats, sim_weights)
+
+
+def modulated_matmul(x: jax.Array, base: jax.Array, tau: jax.Array,
+                     words: jax.Array, lam: jax.Array, *,
+                     mode: Optional[str] = None) -> jax.Array:
+    """Serving: per-request modulated LoRA matmul,
+    ``y_b = x_b @ (base + lam_b · m_b ⊙ tau)`` with the modulator mask
+    kept bit-packed until VMEM (fused word-unpack + λ-scale + matmul —
+    no per-request effective weight in HBM).
+
+    x (B, S, K); base/tau (K, N) fp32; words (B, ceil(K·N/32)) uint32
+    row-major (K, N) mask bits in the LSB-first wire layout; lam (B,)
+    fp32.  Returns (B, S, N) fp32.  ``K · N`` must be word-aligned
+    (% 32 == 0) — the serve router only routes qualifying leaves here.
+    The "ref" dispatch is the unpack-then-matmul oracle; all modes are
+    bit-identical (see tests/test_serve_multitenant.py).
+    """
+    mode = _norm(mode)
+    k, n = base.shape
+    if (k * n) % 32:
+        raise ValueError(f"modulated_matmul needs a word-aligned leaf "
+                         f"(K*N % 32 == 0), got {(k, n)}")
+    if mode == "ref":
+        return ref.modulated_matmul_ref(x, base, tau, words, lam)
+    return modulated_matmul_pallas(x, base, tau, words, lam,
+                                   interpret=(mode == "pallas_interpret"))
 
 
 def _slot_scalars_to_dense(slot_lams, slot_sizes, slot_valid, slot_tasks,

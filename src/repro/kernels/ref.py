@@ -1132,3 +1132,34 @@ def matu_downlink_chunk_ref(task_vectors: jax.Array, slot_valid: jax.Array,
     den, = _lam_totals((den_p,), axis_name, axis_sizes)
     num = num_t[ids_c].reshape(n, k) * vf_nk
     return (uni_buf[:, :d], dmask_buf[:, :, :d], num, den)
+
+
+# ---------------------------------------------------------------------------
+# Serving: modulated LoRA matmul (reference semantics of the fused
+# repro.kernels.modulated_matmul Pallas kernel).
+# ---------------------------------------------------------------------------
+
+
+def modulated_matmul_ref(x: jax.Array, base: jax.Array, tau: jax.Array,
+                         words: jax.Array, lam: jax.Array) -> jax.Array:
+    """Per-request modulated LoRA matmul, the unpack-then-matmul oracle.
+
+    x (B, ..., K); base/tau (K, N) fp32 (the base adapter leaf and the
+    unified-vector slice reshaped to the leaf); words (B, W) uint32
+    bit-packed modulator bits of the leaf, row-major over (K, N); lam
+    (B,) fp32 per-request scalers.  Returns (B, ..., N):
+
+        y_b = x_b @ (base + lam_b * m_b * tau)
+
+    The effective weight is materialised per request here (the extra
+    HBM pass the fused kernel removes); elementwise order matches
+    ``tree_add(lora0, unflatten(modulate(...)))`` exactly —
+    ``(lam * bits) * tau`` is bitwise ``lam * where(m, tau, 0)`` for
+    bits in {0, 1} — so serving paths built from either are
+    bit-identical.
+    """
+    b = x.shape[0]
+    k, n = base.shape
+    bits = bitpack.unpack_bits(words, k * n, jnp.float32).reshape(b, k, n)
+    w_eff = base[None] + lam[:, None, None] * bits * tau[None]
+    return jnp.einsum("b...k,bkn->b...n", x.astype(jnp.float32), w_eff)

@@ -82,13 +82,52 @@ class Dense(Module):
         w = params["w"]
         y = jnp.einsum("...i,io->...o", x, w)
         if lora is not None and "a" in lora:
-            # LoRA: y += (x @ A) @ B * (alpha / r); A:(in,r) B:(r,out)
-            r = lora["a"].shape[-1]
-            scaling = lora.get("alpha", jnp.asarray(float(r), x.dtype)) / r
-            y = y + jnp.einsum("...r,ro->...o", jnp.einsum("...i,ir->...r", x, lora["a"]), lora["b"]) * scaling
+            a = lora["a"]
+            if isinstance(a, dict):
+                # fused multi-tenant form (repro.serve.router): each
+                # leaf is {"base", "tau", "words"} + per-request
+                # "lam"/"alpha" — the modulated weight is built in
+                # VMEM by the fused kernel, never materialised here
+                y = y + self._lora_routed_fused(x, lora)
+            elif a.ndim == 3:
+                # dense-routed multi-tenant form: leaves carry a
+                # leading per-request axis (B, in, r)/(B, r, out)/(B,)
+                r = a.shape[-1]
+                scaling = lora["alpha"].astype(x.dtype) / r
+                h = jnp.einsum("b...i,bir->b...r", x, a)
+                yl = jnp.einsum("b...r,bro->b...o", h, lora["b"])
+                y = y + yl * scaling.reshape((-1,) + (1,) * (yl.ndim - 1))
+            else:
+                # LoRA: y += (x @ A) @ B * (alpha / r); A:(in,r) B:(r,out)
+                r = a.shape[-1]
+                scaling = lora.get("alpha", jnp.asarray(float(r), x.dtype)) / r
+                y = y + jnp.einsum("...r,ro->...o", jnp.einsum("...i,ir->...r", x, a), lora["b"]) * scaling
         if self.bias:
             y = y + params["b"]
         return y
+
+    @staticmethod
+    def _lora_routed_fused(x, lora):
+        """Fused serving branch: both LoRA matmuls run through
+        ``ops.modulated_matmul`` so each request's modulator is applied
+        in VMEM (word-unpack + λ-scale fused into the dot).  ``x`` is
+        (B, in) or (B, S, in); per-request ``lam``/``alpha`` are (B,).
+        Elementwise ``base + lam·m⊙tau`` is bitwise the dense path's
+        ``lora0 + unflatten(modulate(...))`` leaf, so this branch is
+        bit-identical to the dense-routed one under jit."""
+        from repro.kernels import ops as _kops  # local: keep nn dep-free
+        af, bf, lam = lora["a"], lora["b"], lora["lam"]
+        r = af["base"].shape[-1]
+        squeeze = x.ndim == 2
+        x3 = x[:, None, :] if squeeze else x
+        h = _kops.modulated_matmul(x3.astype(jnp.float32), af["base"],
+                                   af["tau"], af["words"], lam)
+        yl = _kops.modulated_matmul(h, bf["base"], bf["tau"], bf["words"],
+                                    lam)
+        scaling = (lora["alpha"].astype(jnp.float32) / r)
+        yl = yl * scaling[:, None, None]
+        yl = yl[:, 0] if squeeze else yl
+        return yl.astype(x.dtype)
 
     # LoRA factory -------------------------------------------------------
     def lora_init(self, key, rank: int, *, alpha: Optional[float] = None, dtype=None):

@@ -46,7 +46,11 @@ def generate(model, params, lora, prompt: jax.Array,
 
     cache = model.init_cache(b, max_len)
     logits, cache = model.prefill_step(params, lora, {"tokens": prompt}, cache)
-    first = _sample(logits, cfg, rng)
+    # split BEFORE first use: the prefill sample and the scan carry must
+    # consume independent streams (reusing `rng` for both correlated the
+    # first token with step 0 at temperature > 0)
+    rng, first_key = jax.random.split(rng)
+    first = _sample(logits, cfg, first_key)
 
     def step(carry, inp):
         tok, cache, key, done = carry
